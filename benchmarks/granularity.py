@@ -1,0 +1,41 @@
+"""Task-granularity sweep (§4.3 / §6): "a too-fine granularity could make
+scheduling tasks the bottleneck, limiting scalability".
+
+Matrix-multiply at fixed problem size with shrinking tiles: finer tasks
+expose more parallelism but raise the master's per-task spawn/schedule
+cost until workers starve (idle time from the master, exactly the paper's
+FFT >=10-worker observation).
+"""
+from __future__ import annotations
+
+from repro.core.costmodel import SCCParams
+from repro.core.sim import sequential_time, simulate
+
+from .workloads import matmul
+
+
+def sweep(p: SCCParams = SCCParams(), *, workers: int = 43,
+          n: int = 1024):
+    rows = []
+    for tile in (256, 128, 64, 32, 16):
+        tasks = matmul("striped", n=n, tile=tile)
+        seq = sequential_time(tasks, p)
+        r = simulate(matmul("striped", n=n, tile=tile), workers, p)
+        rows.append({
+            "tile": tile,
+            "tasks": len(tasks),
+            "speedup": seq / r.total_s,
+            "idle_frac": sum(r.worker_idle_s) /
+            max(sum(r.worker_idle_s) + sum(r.worker_busy_s)
+                + sum(r.worker_flush_s), 1e-12),
+        })
+    return rows
+
+
+def run(report):
+    rows = sweep()
+    for r in rows:
+        report("granularity", f"tile={r['tile']}", r["speedup"])
+        report("granularity", f"idle_frac_tile={r['tile']}",
+               r["idle_frac"])
+    return rows

@@ -1,0 +1,46 @@
+"""Figures 3 & 4: DRAM latency vs hop distance, and contention vs number of
+concurrently accessing cores — from the calibrated cost model.
+
+The paper measures a microbenchmark that repeatedly accesses a 16 MB array
+homed on controller 0.  Here the same experiment runs against the model:
+Fig 3 sweeps the core's distance from MC0; Fig 4 fixes the reference core
+at 9 hops (the paper's worst case) and sweeps how many other cores hammer
+the same controller.
+"""
+from __future__ import annotations
+
+from repro.core.costmodel import SCCParams, core_mc_hops
+
+ARRAY_BYTES = 16 * 2 ** 20
+
+
+def fig3_latency_vs_hops(p: SCCParams = SCCParams()):
+    rows = []
+    for hops in range(10):
+        t = p.mem_time_s(ARRAY_BYTES, hops, concurrent=1)
+        rows.append({"hops": hops, "time_s": t})
+    return rows
+
+
+def fig4_contention(p: SCCParams = SCCParams(), *, ref_hops: int = 9):
+    rows = []
+    for n_cores in range(1, 33):
+        t = p.mem_time_s(ARRAY_BYTES, ref_hops, concurrent=n_cores)
+        rows.append({"cores": n_cores, "time_s": t})
+    return rows
+
+
+def run(report):
+    p = SCCParams()
+    f3 = fig3_latency_vs_hops(p)
+    for r in f3:
+        report("fig3_latency", f"hops={r['hops']}", r["time_s"] * 1e6)
+    ratio3 = f3[-1]["time_s"] / f3[0]["time_s"]
+    report("fig3_latency", "far_vs_near_ratio", ratio3)
+
+    f4 = fig4_contention(p)
+    for r in f4[:32:4]:
+        report("fig4_contention", f"cores={r['cores']}", r["time_s"] * 1e6)
+    ratio4 = f4[-1]["time_s"] / f4[0]["time_s"]
+    report("fig4_contention", "32core_vs_1core_ratio", ratio4)
+    return {"fig3_far_near": ratio3, "fig4_32_1": ratio4}

@@ -1,0 +1,89 @@
+"""Figures 5-7: the five applications on the simulated SCC runtime.
+
+Per application: execution time + speedup vs worker count (Fig 5),
+cumulative idle/app/flush breakdowns (Fig 6), and per-worker load balance
+at 43 workers (Fig 7).  The ``single`` placement column quantifies the
+paper's contention pathology against the ``striped`` fix (§4.2).
+"""
+from __future__ import annotations
+
+from repro.core.costmodel import SCCParams
+from repro.core.sim import sequential_time, simulate
+
+from .workloads import WORKLOADS
+
+WORKER_COUNTS = [1, 2, 4, 8, 12, 16, 22, 28, 36, 43]
+
+
+def scalability(name: str, placement: str = "striped",
+                p: SCCParams = SCCParams(),
+                worker_counts=None) -> dict:
+    gen = WORKLOADS[name]
+    seq = sequential_time(gen(placement), p)
+    rows = []
+    for w in worker_counts or WORKER_COUNTS:
+        r = simulate(gen(placement), w, p)
+        rows.append({
+            "workers": w,
+            "time_s": r.total_s,
+            "speedup": seq / r.total_s,
+            "idle_s": sum(r.worker_idle_s),
+            "app_s": sum(r.worker_busy_s),
+            "flush_s": sum(r.worker_flush_s),
+        })
+    return {"name": name, "placement": placement, "seq_s": seq,
+            "rows": rows}
+
+
+def load_balance(name: str, workers: int = 43,
+                 p: SCCParams = SCCParams()) -> dict:
+    r = simulate(WORKLOADS[name]("striped"), workers, p)
+    return {
+        "name": name,
+        "busy": r.worker_busy_s,
+        "flush": r.worker_flush_s,
+        "idle": r.worker_idle_s,
+        "tasks": r.worker_tasks,
+    }
+
+
+def peak(rows) -> tuple[int, float]:
+    best = max(rows, key=lambda r: r["speedup"])
+    return best["workers"], best["speedup"]
+
+
+def run(report):
+    """Emit Fig 5/6/7 numbers; return the validation summary."""
+    summary = {}
+    for name in WORKLOADS:
+        res = scalability(name)
+        for row in res["rows"]:
+            report(f"fig5_{name}", f"w={row['workers']}",
+                   row["speedup"])
+        w_peak, s_peak = peak(res["rows"])
+        report(f"fig5_{name}", "peak_workers", w_peak)
+        report(f"fig5_{name}", "peak_speedup", s_peak)
+        last = res["rows"][-1]
+        report(f"fig6_{name}", "idle_frac_43",
+               last["idle_s"] / max(last["idle_s"] + last["app_s"]
+                                    + last["flush_s"], 1e-12))
+        report(f"fig6_{name}", "flush_frac_43",
+               last["flush_s"] / max(last["idle_s"] + last["app_s"]
+                                     + last["flush_s"], 1e-12))
+        summary[name] = {"peak_workers": w_peak, "peak_speedup": s_peak,
+                         "speedup_43": last["speedup"]}
+        # contention pathology: same app homed on one controller
+        res1 = scalability(name, placement="single",
+                           worker_counts=[43])
+        report(f"fig5_{name}", "speedup_43_single_mc",
+               res1["rows"][0]["speedup"])
+        summary[name]["speedup_43_single_mc"] = res1["rows"][0]["speedup"]
+    # Fig 7 load balance: coefficient of variation of busy time
+    for name in WORKLOADS:
+        lb = load_balance(name)
+        import numpy as np
+        busy = np.array(lb["busy"])
+        cv = float(busy.std() / max(busy.mean(), 1e-12))
+        report(f"fig7_{name}", "busy_cv_43", cv)
+        summary[name]["busy_cv_43"] = cv
+    return summary

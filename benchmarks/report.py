@@ -1,0 +1,72 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+dry-run JSON records.  Run after ``repro.launch.dryrun``:
+
+    PYTHONPATH=src:. python -m benchmarks.report > experiments/tables.md
+"""
+from __future__ import annotations
+
+import json
+
+from .roofline import build_table, load_all, model_params
+
+
+def _fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def dryrun_table() -> str:
+    rows = ["| arch | shape | mesh | policy | flops/dev | HBM GiB/dev | "
+            "link GiB/dev | collectives (AR/AG/RS/A2A/CP) | compile s |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(load_all(), key=lambda r: (r["arch"], r["shape"],
+                                               r["mesh"])):
+        c = r["collectives"]["counts"]
+        cc = "/".join(str(int(c.get(k, 0))) for k in
+                      ("all-reduce", "all-gather", "reduce-scatter",
+                       "all-to-all", "collective-permute"))
+        mem = r["memory"].get("per_device_total_bytes", 0)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['policy']} | "
+            f"{r['flops_per_device']:.3e} | {_fmt_bytes(mem)} | "
+            f"{r['collectives']['total_link_bytes'] / 2**30:.2f} | {cc} | "
+            f"{r['compile_s']} |")
+    return "\n".join(rows)
+
+
+def roofline_table(mesh="16x16") -> str:
+    rows = ["| arch | shape | compute s | memory s | collective s | "
+            "dominant | 6ND/step | roofline frac | note |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(build_table(mesh=mesh),
+                    key=lambda r: (r["arch"], r["shape"])):
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{100 * r['roofline_fraction']:.1f}% | {r['remedy'][:58]} |")
+    return "\n".join(rows)
+
+
+def params_table() -> str:
+    from repro.configs import ARCH_IDS
+    rows = ["| arch | params total | non-embed | active (MoE) |",
+            "|---|---|---|---|"]
+    for a in ARCH_IDS:
+        p = model_params(a)
+        rows.append(f"| {a} | {p['total'] / 1e9:.2f}B | "
+                    f"{p['non_embed'] / 1e9:.2f}B | "
+                    f"{p['active'] / 1e9:.2f}B |")
+    return "\n".join(rows)
+
+
+def main():
+    print("## Params\n")
+    print(params_table())
+    print("\n## Dry-run (all cells)\n")
+    print(dryrun_table())
+    print("\n## Roofline (single pod)\n")
+    print(roofline_table())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,187 @@
+"""Task-graph generators for the paper's five applications (§4.2 sizes).
+
+Each generator returns a list of :class:`repro.core.sim.SimTask` annotated
+with per-task flops, DRAM bytes (scaled by a cache-locality factor — the
+paper's observation that MM's tile reuse is what lets it scale), and the
+memory-controller homes of its blocks under the chosen placement.
+
+Placements mirror ``repro.core.placement``: ``striped`` distributes blocks
+round-robin over the four controllers (the paper's padding/stride fix);
+``single`` concentrates them on MC0 (the contention pathology).
+"""
+from __future__ import annotations
+
+import math
+
+from repro.core.sim import SimTask
+
+F64 = 8
+F32 = 4
+C128 = 16
+
+
+def _home(i: int, placement: str) -> int:
+    return i % 4 if placement == "striped" else 0
+
+
+def black_scholes(placement: str = "striped", *, n_options: int = 2_000_000,
+                  task_options: int = 512) -> list[SimTask]:
+    """2M options, 512 per task: independent, compute-bound, streaming."""
+    n_tasks = n_options // task_options
+    flops = task_options * 220.0           # erf/exp/log per option
+    byts = task_options * 7 * F32 * 0.5    # streaming, prefetch-friendly
+    return [SimTask(tid=i, flops=flops, mem_bytes=byts,
+                    homes=(_home(i, placement),), n_blocks=2)
+            for i in range(n_tasks)]
+
+
+def matmul(placement: str = "striped", *, n: int = 1024,
+           tile: int = 64) -> list[SimTask]:
+    """1Kx1K floats in 64x64 tiles; C[i,j] accumulates over k (chained)."""
+    g = n // tile
+    tasks = []
+    tid = 0
+    cache_fraction = 0.15                   # tile reuse in L2 (paper: "good
+    flops = 2.0 * tile ** 3                 #  cache locality")
+    byts = 3 * tile * tile * F32 * cache_fraction
+    for i in range(g):
+        for j in range(g):
+            prev = None
+            for k in range(g):
+                homes = tuple({_home(i * g + k, placement),
+                               _home(k * g + j, placement),
+                               _home(i * g + j, placement)})
+                deps = (prev,) if prev is not None else ()
+                tasks.append(SimTask(tid=tid, flops=flops, mem_bytes=byts,
+                                     homes=homes, deps=deps, n_blocks=3))
+                prev = tid
+                tid += 1
+    return tasks
+
+
+def fft(placement: str = "striped", *, n: int = 1024,
+        row_block: int = 32, tile: int = 32) -> list[SimTask]:
+    """2-D FFT of n x n complex doubles: row-FFT phase, tiled transpose,
+    row-FFT phase.  Memory-bound with all-to-all-ish dependencies."""
+    tasks = []
+    tid = 0
+    n_row_tasks = n // row_block
+    logn = math.log2(n)
+    fft_flops = row_block * 5.0 * n * logn
+    fft_bytes = 2 * row_block * n * C128    # read + write, no reuse
+    # phase 1 row FFTs
+    p1 = []
+    for r in range(n_row_tasks):
+        tasks.append(SimTask(tid=tid, flops=fft_flops, mem_bytes=fft_bytes,
+                             homes=(_home(r, placement),), n_blocks=2))
+        p1.append(tid)
+        tid += 1
+    # transpose tiles
+    gt = n // tile
+    tp = {}
+    for i in range(gt):
+        for j in range(gt):
+            src_rows = {(i * tile) // row_block,
+                        ((i + 1) * tile - 1) // row_block}
+            deps = tuple(p1[r] for r in src_rows)
+            homes = tuple({_home(i * gt + j, placement),
+                           _home(j * gt + i, placement)})
+            tasks.append(SimTask(tid=tid, flops=tile * tile * 2.0,
+                                 mem_bytes=2 * tile * tile * C128,
+                                 homes=homes, deps=deps, n_blocks=2))
+            tp[(i, j)] = tid
+            tid += 1
+    # phase 2 row FFTs (on transposed data)
+    for r in range(n_row_tasks):
+        touched = tuple(tp[(i, j)] for i in range(
+            (r * row_block) // tile, ((r + 1) * row_block - 1) // tile + 1)
+            for j in range(gt))
+        tasks.append(SimTask(tid=tid, flops=fft_flops, mem_bytes=fft_bytes,
+                             homes=(_home(r, placement),), deps=touched,
+                             n_blocks=2))
+        tid += 1
+    return tasks
+
+
+def jacobi(placement: str = "striped", *, n: int = 4096, tile: int = 512,
+           iters: int = 16) -> list[SimTask]:
+    """4Kx4K floats, 512x512 tiles, 16 iterations of the 5-point stencil.
+    Strongly memory-bound; neighbour dependencies across iterations."""
+    g = n // tile
+    tasks = []
+    grid_prev = {}
+    tid = 0
+    flops = 4.0 * tile * tile
+    byts = 2.2 * tile * tile * F32          # read + write + halo strips
+    for it in range(iters):
+        grid_now = {}
+        for i in range(g):
+            for j in range(g):
+                deps = []
+                if it > 0:
+                    for di, dj in ((0, 0), (1, 0), (-1, 0), (0, 1), (0, -1)):
+                        key = (i + di, j + dj)
+                        if key in grid_prev:
+                            deps.append(grid_prev[key])
+                tasks.append(SimTask(
+                    tid=tid, flops=flops, mem_bytes=byts,
+                    homes=(_home(i * g + j, placement),),
+                    deps=tuple(deps), n_blocks=6))
+                grid_now[(i, j)] = tid
+                tid += 1
+        grid_prev = grid_now
+    return tasks
+
+
+def cholesky(placement: str = "striped", *, n: int = 2048,
+             tile: int = 128) -> list[SimTask]:
+    """2Kx2K doubles, 128x128 tiles, right-looking factorization: deep
+    dependency chains + fine tasks (the paper's master-bottleneck case)."""
+    g = n // tile
+    tasks = []
+    tid = 0
+    owner: dict[tuple[int, int], int] = {}
+    cache_fraction = 0.8                    # 3 x 128KB tiles exceed L2
+
+    def home(i, j):
+        return _home(i * g + j, placement)
+
+    def add(flops, byts, homes, deps, blocks):
+        nonlocal tid
+        tasks.append(SimTask(tid=tid, flops=flops,
+                             mem_bytes=byts * cache_fraction,
+                             homes=tuple(set(homes)), deps=tuple(deps),
+                             n_blocks=blocks))
+        tid += 1
+        return tid - 1
+
+    for k in range(g):
+        d = owner.get((k, k))
+        potrf = add(tile ** 3 / 3.0, tile * tile * F64, [home(k, k)],
+                    [d] if d is not None else [], 1)
+        owner[(k, k)] = potrf
+        for i in range(k + 1, g):
+            d = [potrf]
+            if (i, k) in owner:
+                d.append(owner[(i, k)])
+            trsm = add(float(tile ** 3), 2 * tile * tile * F64,
+                       [home(i, k), home(k, k)], d, 2)
+            owner[(i, k)] = trsm
+        for i in range(k + 1, g):
+            for j in range(k + 1, i + 1):
+                d = [owner[(i, k)], owner[(j, k)]]
+                if (i, j) in owner:
+                    d.append(owner[(i, j)])
+                upd = add(2.0 * tile ** 3, 3 * tile * tile * F64,
+                          [home(i, j), home(i, k), home(j, k)], d, 3)
+                owner[(i, j)] = upd
+    return tasks
+
+
+WORKLOADS = {
+    "black_scholes": black_scholes,
+    "matmul": matmul,
+    "fft": fft,
+    "jacobi": jacobi,
+    "cholesky": cholesky,
+}

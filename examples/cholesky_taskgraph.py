@@ -1,0 +1,58 @@
+"""Task-parallel tiled Cholesky — the paper's hardest benchmark.
+
+The right-looking factorization spawns potrf/trsm/update tile tasks whose
+footprints overlap heavily; BDDT dependence analysis discovers the DAG
+(RAW through the panel, WAW on diagonal updates) and the staged executor
+runs it in wavefronts — on TPU the update tasks are the Pallas
+``tile_update`` kernel.
+
+    PYTHONPATH=src python examples/cholesky_taskgraph.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import In, InOut, TaskRuntime
+from repro.kernels.cholesky import ops as chol
+
+
+def main(n: int = 512, tile: int = 64):
+    g = n // tile
+    rng = np.random.default_rng(0)
+    m = rng.standard_normal((n, n)).astype(np.float32)
+    spd = m @ m.T + n * np.eye(n, dtype=np.float32)
+
+    rt = TaskRuntime(executor="staged", placement="striped_diag")
+    A = rt.from_array(spd, (tile, tile), name="A")
+
+    def potrf(a):
+        return chol.potrf(a)
+
+    def trsm(l, a):
+        return chol.trsm(l, a)
+
+    def update(c, a, b):
+        return chol.update(c, a, b)
+
+    for k in range(g):
+        rt.spawn(potrf, InOut(A[k, k]), name=f"potrf{k}")
+        for i in range(k + 1, g):
+            rt.spawn(trsm, In(A[k, k]), InOut(A[i, k]), name=f"trsm{i}{k}")
+        for i in range(k + 1, g):
+            for j in range(k + 1, i + 1):
+                rt.spawn(update, InOut(A[i, j]), In(A[i, k]), In(A[j, k]),
+                         name=f"upd{i}{j}{k}")
+    rt.barrier()
+
+    got = np.tril(np.asarray(A.gather()))
+    want = np.asarray(jnp.linalg.cholesky(jnp.asarray(spd)))
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+    s = rt.stats()
+    print(f"cholesky {n}x{n}/{tile}: {s['tasks_spawned']} tasks, "
+          f"{s['deps_found']} deps, {s.get('waves', '?')} wavefronts "
+          f"-> factor verified against jnp.linalg.cholesky")
+    print("wavefront width = available parallelism per step; the paper's "
+          "22-worker saturation is this DAG's critical path showing up")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Quickstart: the BDDT-SCC programming model in five minutes.
+
+Spawn tasks with declared footprints (In/Out/InOut over block regions);
+the runtime discovers dependencies block-by-block, schedules tasks over
+workers through bounded MPB-style descriptor rings, and a barrier drains
+everything.  Swap ``executor=`` between the paper-faithful dynamic host
+runtime and the TPU-idiomatic staged wavefront executor — results are
+identical (serial elision).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import In, InOut, TaskRuntime
+
+
+def gemm_tile(c, a, b):
+    """One tile task: C[i,j] += A[i,k] @ B[k,j]."""
+    return c + a @ b
+
+
+def main():
+    n, tile = 512, 64
+    g = n // tile
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((n, n), dtype=np.float32)
+    b = rng.standard_normal((n, n), dtype=np.float32)
+
+    for executor in ("host", "staged"):
+        rt = TaskRuntime(executor=executor, n_workers=4, mpb_slots=8,
+                         policy="locality")
+        A = rt.from_array(a, (tile, tile), name="A")
+        B = rt.from_array(b, (tile, tile), name="B")
+        C = rt.zeros((n, n), (tile, tile), name="C")
+
+        # OmpSs-style task loop: footprints give the runtime everything it
+        # needs — no locks, no barriers between dependent tasks
+        for i in range(g):
+            for j in range(g):
+                for k in range(g):
+                    rt.spawn(gemm_tile, InOut(C[i, j]), In(A[i, k]),
+                             In(B[k, j]))
+        rt.barrier()
+
+        got = np.asarray(C.gather())
+        np.testing.assert_allclose(got, a @ b, rtol=2e-4, atol=2e-4)
+        s = rt.stats()
+        print(f"[{executor:6s}] {s['tasks_spawned']} tasks, "
+              f"{s['deps_found']} dependencies, "
+              f"spawn {1e6 * s['spawn_time_s'] / s['tasks_spawned']:.1f} "
+              f"us/task -> result verified")
+        rt.shutdown()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Batched serving driver: prefill a batch of prompts, then decode with
+the pre-allocated KV arena (the decode_32k dry-run shape, miniaturized).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch mistral-nemo-12b
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.launch.serve import generate
+from repro.models import api
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mistral-nemo-12b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    batch = {"tokens": jax.random.randint(
+        ks[0], (args.batch, args.prompt_len), 0, cfg.vocab_size)}
+    if cfg.vision_seq:
+        batch["vision_embeds"] = 0.02 * jax.random.normal(
+            ks[1], (args.batch, cfg.vision_seq, cfg.d_model),
+            jnp.dtype(cfg.compute_dtype))
+    if cfg.family == "audio":
+        batch["enc_frames"] = 0.02 * jax.random.normal(
+            ks[2], (args.batch, cfg.encoder_seq, cfg.d_model),
+            jnp.dtype(cfg.compute_dtype))
+
+    t0 = time.perf_counter()
+    out = generate(cfg, params, batch, max_new_tokens=args.new_tokens,
+                   max_len=args.prompt_len + args.new_tokens + 8,
+                   temperature=args.temperature)
+    dt = time.perf_counter() - t0
+    print(f"[serve] {cfg.name}: generated {out.shape[0]}x{out.shape[1]} "
+          f"tokens in {dt:.2f}s ({out.size / dt:.1f} tok/s incl. compile)")
+    print(out[:, :12])
+    assert out.shape == (args.batch, args.new_tokens)
+    assert int(out.max()) < cfg.vocab_size
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""End-to-end training driver: a small LM on the synthetic pipeline with
+checkpoint/restart.
+
+Any of the ten architectures works via --arch (reduced to a CPU-sized
+sibling with --reduced); scale d_model/layers up on real hardware.  The
+loss must fall well below ln(vocab) — the pipeline injects learnable
+bigram structure.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 60
+"""
+import argparse
+import dataclasses
+import math
+
+import jax
+
+from repro.configs import get_config
+from repro.launch.train import train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-4b")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced(
+        d_model=args.d_model, n_layers=args.layers,
+        d_ff=args.d_model * 2, vocab_size=2048)
+    n_params_est = args.layers * 12 * args.d_model ** 2
+    print(f"[example] {cfg.name} reduced: ~{n_params_est/1e6:.1f}M "
+          f"block params, seq {args.seq_len}, batch {args.global_batch}")
+
+    params, opt, history = train_loop(
+        cfg, steps=args.steps, seq_len=args.seq_len,
+        global_batch=args.global_batch, ckpt_dir=args.ckpt_dir,
+        ckpt_every=max(args.steps // 2, 10), peak_lr=1e-3)
+
+    first, last = history[0]["loss"], history[-1]["loss"]
+    print(f"[example] loss {first:.3f} -> {last:.3f} "
+          f"(uniform = {math.log(cfg.padded_vocab):.3f})")
+    assert last < first - 0.5, "loss did not decrease"
+    print("[example] checkpoint saved; re-run to resume from it")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""BDDT-SCC reproduction: task-parallel dataflow runtime + multi-pod JAX
+LM framework.  See README.md / DESIGN.md / EXPERIMENTS.md."""
+
+__version__ = "1.0.0"

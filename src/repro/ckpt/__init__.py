@@ -1,0 +1,4 @@
+"""Checkpointing: save/restore with manifest + elastic resharding."""
+from .checkpoint import save_checkpoint, restore_checkpoint, latest_step
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]

@@ -1,0 +1,110 @@
+"""Checkpoint save/restore with a JSON manifest and elastic resharding.
+
+Layout::
+
+    <dir>/step_<k>/manifest.json     # tree structure, shapes, dtypes, meta
+    <dir>/step_<k>/arr_<i>.npy       # one file per leaf
+    <dir>/step_<k>/_COMMITTED        # written last -> crash-safe commit
+
+Restore places leaves onto the *current* mesh with the *current* sharding
+rules — the checkpoint stores logical arrays, not device layouts, so a run
+checkpointed on a (16, 16) mesh restarts unmodified on (8, 16) or one pod
+instead of two (elastic scaling / failed-pod recovery).  ``async_save``
+snapshots to host memory synchronously and writes in a daemon thread, so
+training resumes after one device->host copy.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _leaves_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(p) for p in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree, *, meta: dict | None
+                    = None, async_save: bool = False):
+    """Serialize a pytree of arrays.  Returns the checkpoint path (or the
+    writer thread when ``async_save``)."""
+    paths, leaves, _ = _leaves_with_paths(tree)
+    # snapshot to host first (cheap on CPU; device->host copy on TPU)
+    host_leaves = [np.asarray(x) for x in leaves]
+
+    def write():
+        out = os.path.join(directory, f"step_{step:08d}")
+        tmp = out + ".tmp"
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {"step": step, "meta": meta or {}, "leaves": []}
+        for i, (p, arr) in enumerate(zip(paths, host_leaves)):
+            np.save(os.path.join(tmp, f"arr_{i}.npy"), arr)
+            manifest["leaves"].append(
+                {"path": p, "shape": list(arr.shape),
+                 "dtype": str(arr.dtype), "file": f"arr_{i}.npy"})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        with open(os.path.join(tmp, "_COMMITTED"), "w") as f:
+            f.write("ok")
+        shutil.rmtree(out, ignore_errors=True)
+        os.replace(tmp, out)
+        return out
+
+    if async_save:
+        t = threading.Thread(target=write, daemon=True,
+                             name=f"ckpt-writer-{step}")
+        t.start()
+        return t
+    return write()
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    best = None
+    for name in os.listdir(directory):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m and os.path.exists(os.path.join(directory, name, "_COMMITTED")):
+            s = int(m.group(1))
+            best = s if best is None else max(best, s)
+    return best
+
+
+def restore_checkpoint(directory: str, step: int, like_tree, *,
+                       shardings=None):
+    """Restore into the structure of ``like_tree`` (abstract or concrete).
+    ``shardings``: optional matching pytree of NamedSharding — leaves are
+    device_put with them (elastic restore onto any mesh)."""
+    src = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(src, "manifest.json")) as f:
+        manifest = json.load(f)
+    paths, leaves, treedef = _leaves_with_paths(like_tree)
+    by_path = {e["path"]: e for e in manifest["leaves"]}
+    if set(paths) != set(by_path):
+        missing = set(paths) - set(by_path)
+        extra = set(by_path) - set(paths)
+        raise ValueError(f"checkpoint/tree mismatch: missing={sorted(missing)[:4]} "
+                         f"extra={sorted(extra)[:4]}")
+    shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                    if shardings is not None else [None] * len(paths))
+    out = []
+    for p, like, sh in zip(paths, leaves, shard_leaves):
+        arr = np.load(os.path.join(src, by_path[p]["file"]))
+        want_shape = tuple(like.shape)
+        if tuple(arr.shape) != want_shape:
+            raise ValueError(f"{p}: shape {arr.shape} != {want_shape}")
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jax.numpy.asarray(arr, dtype=like.dtype))
+    return treedef.unflatten(out), manifest["meta"], manifest["step"]

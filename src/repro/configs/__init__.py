@@ -1,0 +1,76 @@
+"""Architecture registry: ``get_config("<arch-id>")`` + input_specs.
+
+All 10 assigned architectures (plus the paper's own benchmark suite, see
+``paper_suite``) are selectable by id, e.g. ``--arch qwen2-vl-72b``.
+"""
+from __future__ import annotations
+
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from .base import SHAPES, ModelConfig, ShapeSpec, applicable_shapes
+
+_MODULES = {
+    "granite-moe-1b-a400m": ".granite_moe_1b_a400m",
+    "deepseek-v2-lite-16b": ".deepseek_v2_lite_16b",
+    "qwen2-vl-72b": ".qwen2_vl_72b",
+    "command-r-35b": ".command_r_35b",
+    "qwen1.5-4b": ".qwen15_4b",
+    "mistral-nemo-12b": ".mistral_nemo_12b",
+    "nemotron-4-15b": ".nemotron_4_15b",
+    "zamba2-1.2b": ".zamba2_1p2b",
+    "xlstm-1.3b": ".xlstm_1p3b",
+    "whisper-tiny": ".whisper_tiny",
+}
+
+ARCH_IDS = list(_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    try:
+        mod = importlib.import_module(_MODULES[arch_id], __package__)
+    except KeyError:
+        raise ValueError(f"unknown arch {arch_id!r}; one of {ARCH_IDS}") \
+            from None
+    return mod.ARCH
+
+
+def input_specs(cfg: ModelConfig, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of a cell — weak-
+    type-correct, shardable, no device allocation.
+
+    * train/prefill -> {"batch": {"tokens", modality stubs...}}
+    * decode        -> {"token", "caches", "pos"}
+    """
+    from ..models import api
+
+    spec = SHAPES[shape_name]
+    b, s = spec.global_batch, spec.seq_len
+    i32 = jnp.int32
+    cd = jnp.dtype(cfg.compute_dtype)
+
+    def batch_specs(seq):
+        out = {"tokens": jax.ShapeDtypeStruct((b, seq), i32)}
+        if cfg.vision_seq:
+            out["vision_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.vision_seq, cfg.d_model), cd)
+        if cfg.family == "audio":
+            out["enc_frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), cd)
+        return out
+
+    if spec.kind in ("train", "prefill"):
+        return {"batch": batch_specs(s)}
+    # decode: one new token against a seq_len cache
+    caches = jax.eval_shape(lambda: api.init_cache(cfg, b, s))
+    return {
+        "token": jax.ShapeDtypeStruct((b, 1), i32),
+        "caches": caches,
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }
+
+
+__all__ = ["ARCH_IDS", "get_config", "input_specs", "ModelConfig",
+           "ShapeSpec", "SHAPES", "applicable_shapes"]

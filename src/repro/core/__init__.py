@@ -1,0 +1,20 @@
+"""BDDT-SCC in JAX: block-level dynamic dependence analysis + task runtime.
+
+The paper's primary contribution — an OmpSs-style task-parallel runtime for
+non cache-coherent hardware — implemented as:
+
+* :mod:`blocks`     — the custom block allocator (BlockArray / Region / In-Out-InOut)
+* :mod:`deps`       — block-level dynamic dependence analysis (BDDT)
+* :mod:`graph`      — task descriptors, descriptor pool, ready/completion queues
+* :mod:`mpb`        — message-passing-buffer SPSC descriptor rings
+* :mod:`scheduler`  — the master's running/polling modes + lazy release
+* :mod:`executor`   — sequential (oracle) / host (faithful) / staged (TPU) execution
+* :mod:`placement`  — memory-controller striping -> block-cyclic device placement
+* :mod:`costmodel`  — SCC latency/contention model (Figs 3-4) + TPU roofline
+* :mod:`sim`        — discrete-event simulation of the SCC runtime (Figs 5-7)
+* :mod:`pipeline`   — pipeline-parallel schedules derived by dependence analysis
+"""
+from .blocks import BlockArray, In, InOut, Out, Region
+from .runtime import TaskRuntime
+
+__all__ = ["TaskRuntime", "BlockArray", "In", "Out", "InOut", "Region"]

@@ -1,0 +1,247 @@
+"""Block-structured arrays: the BDDT custom allocator, in JAX.
+
+BDDT-SCC splits all application memory into fixed-size *blocks* via a custom
+allocator; blocks are the unit of dependence analysis and of placement across
+the SCC's four memory controllers.  Here an array registered with the runtime
+becomes a :class:`BlockArray` — a grid of tiles.  Tiles are the dependence
+unit (``deps.py``), the scheduling-affinity unit (``scheduler.py``) and the
+placement unit (``placement.py``: tile -> "memory controller" / mesh device).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterator, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "BlockArray",
+    "Region",
+    "In",
+    "Out",
+    "InOut",
+    "AccessMode",
+]
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+class BlockArray:
+    """An N-D array stored as a grid of tiles (BDDT "blocks").
+
+    Tiles are held as individual ``jnp`` arrays so that tasks touch only the
+    blocks in their declared footprint — the software analogue of the SCC's
+    block allocator, where a task's footprint names exactly the DRAM blocks
+    it may access.
+    """
+
+    _next_id = itertools.count()
+
+    def __init__(self, shape: Sequence[int], block_shape: Sequence[int],
+                 dtype=jnp.float32, name: str | None = None):
+        if len(shape) != len(block_shape):
+            raise ValueError("shape and block_shape rank mismatch")
+        for s, b in zip(shape, block_shape):
+            if s % b != 0:
+                raise ValueError(
+                    f"shape {tuple(shape)} not divisible by block_shape "
+                    f"{tuple(block_shape)}; pad the array first (the paper's "
+                    "allocator likewise pads to block multiples)")
+        self.shape = tuple(int(s) for s in shape)
+        self.block_shape = tuple(int(b) for b in block_shape)
+        self.dtype = dtype
+        self.grid = tuple(s // b for s, b in zip(self.shape, self.block_shape))
+        self.array_id = next(BlockArray._next_id)
+        self.name = name or f"arr{self.array_id}"
+        # tile index tuple -> jnp array of block_shape
+        self._tiles: dict[tuple[int, ...], Any] = {}
+        # tile index tuple -> home id (memory controller / device ordinal)
+        self.home: dict[tuple[int, ...], int] = {}
+
+    # -- construction -----------------------------------------------------
+    @classmethod
+    def from_array(cls, arr, block_shape: Sequence[int],
+                   name: str | None = None) -> "BlockArray":
+        arr = jnp.asarray(arr)
+        ba = cls(arr.shape, block_shape, arr.dtype, name=name)
+        for idx in ba.block_indices():
+            ba._tiles[idx] = arr[ba._tile_slices(idx)]
+        return ba
+
+    @classmethod
+    def full(cls, shape, block_shape, fill, dtype=jnp.float32,
+             name: str | None = None) -> "BlockArray":
+        ba = cls(shape, block_shape, dtype, name=name)
+        tile = jnp.full(ba.block_shape, fill, dtype)
+        for idx in ba.block_indices():
+            ba._tiles[idx] = tile
+        return ba
+
+    @classmethod
+    def zeros(cls, shape, block_shape, dtype=jnp.float32,
+              name: str | None = None) -> "BlockArray":
+        return cls.full(shape, block_shape, 0, dtype, name=name)
+
+    # -- indexing ----------------------------------------------------------
+    def block_indices(self) -> Iterator[tuple[int, ...]]:
+        return itertools.product(*[range(g) for g in self.grid])
+
+    def _tile_slices(self, idx: tuple[int, ...]) -> tuple[slice, ...]:
+        return tuple(slice(i * b, (i + 1) * b)
+                     for i, b in zip(idx, self.block_shape))
+
+    def __getitem__(self, key) -> "Region":
+        """``A[i, j]`` (one tile) or ``A[i0:i1, j]`` (tile range) -> Region.
+
+        Indices are in *block* coordinates, exactly as OmpSs task footprints
+        name array tiles.
+        """
+        if not isinstance(key, tuple):
+            key = (key,)
+        if len(key) != len(self.grid):
+            raise IndexError(f"{self.name}: need {len(self.grid)} block "
+                             f"indices, got {len(key)}")
+        ranges = []
+        for k, g in zip(key, self.grid):
+            if isinstance(k, slice):
+                start, stop, step = k.indices(g)
+                if step != 1:
+                    raise IndexError("block slices must be unit-stride")
+                ranges.append(range(start, stop))
+            else:
+                k = int(k)
+                if k < 0:
+                    k += g
+                if not 0 <= k < g:
+                    raise IndexError(f"block index {k} out of range {g}")
+                ranges.append(range(k, k + 1))
+        return Region(self, tuple(ranges))
+
+    @property
+    def whole(self) -> "Region":
+        return Region(self, tuple(range(g) for g in self.grid))
+
+    # -- tile data access (used by the executors) ---------------------------
+    def get_tile(self, idx: tuple[int, ...]):
+        return self._tiles[idx]
+
+    def set_tile(self, idx: tuple[int, ...], value) -> None:
+        if tuple(value.shape) != self.block_shape:
+            raise ValueError(
+                f"{self.name}{list(idx)}: tile shape {tuple(value.shape)} != "
+                f"block shape {self.block_shape}")
+        self._tiles[idx] = value
+
+    def gather(self):
+        """Assemble the full array from tiles (the read-back at a barrier)."""
+        nested = np.empty(self.grid, dtype=object)
+        for idx in self.block_indices():
+            nested[idx] = self._tiles[idx]
+        if len(self.grid) == 1:
+            return jnp.concatenate(list(nested), axis=0)
+        return jnp.block(nested.tolist())
+
+    def scatter(self, arr) -> None:
+        """Overwrite all tiles from a full array."""
+        arr = jnp.asarray(arr)
+        if arr.shape != self.shape:
+            raise ValueError("scatter shape mismatch")
+        for idx in self.block_indices():
+            self._tiles[idx] = arr[self._tile_slices(idx)]
+
+    def __repr__(self):
+        return (f"BlockArray({self.name}, shape={self.shape}, "
+                f"blocks={self.grid}x{self.block_shape}, dtype={self.dtype})")
+
+
+@dataclass(frozen=True)
+class Region:
+    """A rectangular range of tiles of one BlockArray — a task footprint item."""
+    array: BlockArray
+    ranges: tuple[range, ...]
+
+    @property
+    def block_ids(self) -> tuple[tuple[int, tuple[int, ...]], ...]:
+        """Globally unique block ids: (array_id, tile index)."""
+        return tuple((self.array.array_id, idx)
+                     for idx in itertools.product(*self.ranges))
+
+    @property
+    def tile_indices(self) -> list[tuple[int, ...]]:
+        return list(itertools.product(*self.ranges))
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return tuple(len(r) * b
+                     for r, b in zip(self.ranges, self.array.block_shape))
+
+    @property
+    def nbytes(self) -> int:
+        return int(np.prod(self.shape)) * jnp.dtype(self.array.dtype).itemsize
+
+    def materialize(self):
+        """Assemble this region's tiles into one array (task input value)."""
+        idxs = self.tile_indices
+        if len(idxs) == 1:
+            return self.array.get_tile(idxs[0])
+        grid = tuple(len(r) for r in self.ranges)
+        nested = np.empty(grid, dtype=object)
+        for pos in itertools.product(*[range(g) for g in grid]):
+            src = tuple(r[p] for r, p in zip(self.ranges, pos))
+            nested[pos] = self.array.get_tile(src)
+        if len(grid) == 1:
+            return jnp.concatenate(list(nested), axis=0)
+        return jnp.block(nested.tolist())
+
+    def store(self, value) -> None:
+        """Split a produced value back into this region's tiles (task output)."""
+        idxs = self.tile_indices
+        if len(idxs) == 1:
+            self.array.set_tile(idxs[0], value)
+            return
+        if tuple(value.shape) != self.shape:
+            raise ValueError(f"store shape {tuple(value.shape)} != region "
+                             f"shape {self.shape}")
+        bs = self.array.block_shape
+        for pos in itertools.product(*[range(len(r)) for r in self.ranges]):
+            src = tuple(r[p] for r, p in zip(self.ranges, pos))
+            sl = tuple(slice(p * b, (p + 1) * b) for p, b in zip(pos, bs))
+            self.array.set_tile(src, value[sl])
+
+    def __repr__(self):
+        rs = ",".join(f"{r.start}:{r.stop}" if len(r) > 1 else str(r.start)
+                      for r in self.ranges)
+        return f"{self.array.name}[{rs}]"
+
+
+class AccessMode:
+    """OmpSs data-access attribute on a task argument (§3.1)."""
+    READS = False
+    WRITES = False
+
+    def __init__(self, region: Region):
+        if not isinstance(region, Region):
+            raise TypeError(f"expected a Region (e.g. A[i, j]), got "
+                            f"{type(region).__name__}")
+        self.region = region
+
+    def __repr__(self):
+        return f"{type(self).__name__}({self.region!r})"
+
+
+class In(AccessMode):
+    READS = True
+
+
+class Out(AccessMode):
+    WRITES = True
+
+
+class InOut(AccessMode):
+    READS = True
+    WRITES = True

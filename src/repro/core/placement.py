@@ -1,0 +1,68 @@
+"""Block placement across memory controllers (§4.1-§4.2).
+
+The SCC's four memory controllers give each core a distance-dependent DRAM
+latency, and concurrent access to one controller creates strong contention.
+The paper's fix is to distribute application data across all controllers
+"as uniformly as possible" using padding and non-unit strides at allocation.
+
+Here placement assigns each block a *home* — on the SCC a memory controller,
+on a TPU mesh a device / HBM channel.  The DES charges contention per home;
+on a real mesh :func:`device_assignment` turns homes into a block-cyclic
+``NamedSharding`` layout, the generalization of the paper's striping.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import numpy as np
+
+from .blocks import BlockArray
+
+__all__ = ["assign_homes", "PLACEMENTS", "home_histogram"]
+
+
+def _single(ba: BlockArray, n_homes: int) -> None:
+    """Everything behind controller 0 — the paper's pathological baseline
+    ("small, concentrated datasets ... within the shared-memory segment of a
+    single memory controller")."""
+    for idx in ba.block_indices():
+        ba.home[idx] = 0
+
+
+def _striped(ba: BlockArray, n_homes: int) -> None:
+    """Block-cyclic striping across all controllers (the paper's padding +
+    non-unit-stride allocation pattern)."""
+    for i, idx in enumerate(ba.block_indices()):
+        ba.home[idx] = i % n_homes
+
+
+def _striped_diag(ba: BlockArray, n_homes: int) -> None:
+    """Diagonal striping: for 2-D grids, ``home = (i + j) % n`` keeps both
+    row-walks and column-walks balanced (useful for Cholesky/MM traversals
+    where row-major striping aliases the traversal order)."""
+    for idx in ba.block_indices():
+        ba.home[idx] = int(np.sum(idx)) % n_homes
+
+
+PLACEMENTS: dict[str, Callable[[BlockArray, int], None]] = {
+    "single": _single,
+    "striped": _striped,
+    "striped_diag": _striped_diag,
+}
+
+
+def assign_homes(ba: BlockArray, policy: str = "striped",
+                 n_homes: int = 4) -> BlockArray:
+    try:
+        PLACEMENTS[policy](ba, n_homes)
+    except KeyError:
+        raise ValueError(f"unknown placement {policy!r}; "
+                         f"one of {sorted(PLACEMENTS)}") from None
+    return ba
+
+
+def home_histogram(ba: BlockArray, n_homes: int = 4) -> list[int]:
+    hist = [0] * n_homes
+    for h in ba.home.values():
+        hist[h] += 1
+    return hist

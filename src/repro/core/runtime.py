@@ -1,0 +1,155 @@
+"""The BDDT-SCC front-end: spawn tasks with declared footprints, barrier.
+
+Usage (OmpSs in JAX clothing)::
+
+    from repro.core import TaskRuntime, In, Out, InOut
+
+    rt = TaskRuntime(executor="host", n_workers=4)
+    A = rt.from_array(a, block_shape=(64, 64))
+    B = rt.from_array(b, block_shape=(64, 64))
+    C = rt.zeros((n, n), block_shape=(64, 64))
+
+    for i in range(g):
+        for j in range(g):
+            for k in range(g):
+                rt.spawn(gemm_tile, InOut(C[i, j]), In(A[i, k]), In(B[k, j]))
+    rt.barrier()
+    result = C.gather()
+
+Task functions receive one array per READS argument (in argument order) and
+return one array per WRITES argument (in argument order).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Sequence
+
+from .blocks import AccessMode, BlockArray, In, InOut, Out, Region
+from .deps import DependenceAnalyzer
+from .executor import (ExecutorBase, HostExecutor, SequentialExecutor,
+                       StagedExecutor)
+from .graph import DescriptorPool, TaskDescriptor, TaskGraph
+from .mpb import MPBQueue
+from .placement import assign_homes
+from .scheduler import MasterScheduler
+
+__all__ = ["TaskRuntime"]
+
+_EXECUTORS = ("sequential", "host", "staged")
+
+
+class TaskRuntime:
+    """One master + N workers + the block store, wired per the paper."""
+
+    def __init__(self, executor: str = "host", n_workers: int = 4,
+                 mpb_slots: int = 16, pool_capacity: int = 4096,
+                 policy: str = "round_robin", placement: str = "striped",
+                 n_controllers: int = 4, group_waves: bool = True,
+                 seed: int = 0):
+        if executor not in _EXECUTORS:
+            raise ValueError(f"executor must be one of {_EXECUTORS}")
+        self.executor_kind = executor
+        self.placement = placement
+        self.n_controllers = n_controllers
+        self.graph = TaskGraph()
+        self.pool = DescriptorPool(pool_capacity)
+        self.analyzer = DependenceAnalyzer()
+        self.queues = [MPBQueue(w, mpb_slots) for w in range(n_workers)]
+        self.scheduler = MasterScheduler(self.queues, self.graph, self.pool,
+                                         self.analyzer, policy=policy,
+                                         seed=seed)
+        if executor == "sequential":
+            self._exec: ExecutorBase = SequentialExecutor(self.graph,
+                                                          self.scheduler)
+        elif executor == "host":
+            self._exec = HostExecutor(self.graph, self.scheduler, self.queues)
+        else:
+            self._exec = StagedExecutor(self.graph, self.scheduler,
+                                        group=group_waves)
+        self._arrays: list[BlockArray] = []
+        self._spawn_counter = 0
+        self.spawn_time_s = 0.0
+        self.barrier_time_s = 0.0
+
+    # -- memory management (§3.2): the custom allocator --------------------------
+    def _register(self, ba: BlockArray) -> BlockArray:
+        assign_homes(ba, self.placement, self.n_controllers)
+        self._arrays.append(ba)
+        return ba
+
+    def from_array(self, arr, block_shape: Sequence[int],
+                   name: str | None = None) -> BlockArray:
+        return self._register(BlockArray.from_array(arr, block_shape, name))
+
+    def zeros(self, shape, block_shape, dtype=None,
+              name: str | None = None) -> BlockArray:
+        import jax.numpy as jnp
+        return self._register(BlockArray.zeros(
+            shape, block_shape, dtype or jnp.float32, name))
+
+    def full(self, shape, block_shape, fill, dtype=None,
+             name: str | None = None) -> BlockArray:
+        import jax.numpy as jnp
+        return self._register(BlockArray.full(
+            shape, block_shape, fill, dtype or jnp.float32, name))
+
+    # -- task initiation (§3.3) -----------------------------------------------------
+    def spawn(self, fn: Callable, *args: AccessMode, name: str = "") -> TaskDescriptor:
+        for a in args:
+            if not isinstance(a, AccessMode):
+                raise TypeError(
+                    "spawn arguments must be In/Out/InOut(region); got "
+                    f"{type(a).__name__}")
+        t0 = time.perf_counter()
+        td = self.pool.acquire(fn, args, name=name)
+        while td is None:
+            # §3.3: no free descriptors -> master blocks until one recycles
+            self._exec.reclaim()
+            td = self.pool.acquire(fn, args, name=name)
+        td.spawn_order = self._spawn_counter
+        self._spawn_counter += 1
+        deps = self.analyzer.analyze(td)
+        ready = self.graph.insert(td, deps)
+        self._exec.on_spawn(td, ready)
+        self.spawn_time_s += time.perf_counter() - t0
+        return td
+
+    # -- synchronization ---------------------------------------------------------------
+    def barrier(self) -> None:
+        t0 = time.perf_counter()
+        self._exec.barrier()
+        self.barrier_time_s += time.perf_counter() - t0
+        assert self.graph.quiescent
+
+    def shutdown(self) -> None:
+        self._exec.shutdown()
+
+    def __enter__(self) -> "TaskRuntime":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        try:
+            if exc == (None, None, None):
+                self.barrier()
+        finally:
+            self.shutdown()
+
+    # -- instrumentation -----------------------------------------------------------------
+    def stats(self) -> dict:
+        s = {
+            "tasks_spawned": self._spawn_counter,
+            "tasks_scheduled": self.scheduler.tasks_scheduled,
+            "polling_rounds": self.scheduler.polling_rounds,
+            "blocks_walked": self.analyzer.blocks_walked,
+            "deps_found": self.analyzer.deps_found,
+            "spawn_time_s": self.spawn_time_s,
+            "barrier_time_s": self.barrier_time_s,
+            "mpb_full_rejections": sum(q.full_rejections for q in self.queues),
+        }
+        if isinstance(self._exec, HostExecutor):
+            s["worker_busy_s"] = [w.busy_s for w in self._exec.workers]
+            s["worker_tasks"] = [w.tasks_run for w in self._exec.workers]
+        if isinstance(self._exec, StagedExecutor):
+            s["waves"] = self._exec.waves_run
+            s["grouped_dispatches"] = self._exec.grouped_dispatches
+        return s

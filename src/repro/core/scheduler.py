@@ -1,0 +1,175 @@
+"""The master core's scheduling logic (§3.4) and task release (§3.6).
+
+The master is in one of two modes:
+
+* **running** — executing the main program.  A spawned, immediately-ready
+  task is appended to some worker's MPB queue; if that worker's next slot is
+  full the task goes to the master's local ready queue and the main program
+  continues — the master *never blocks at a spawn*.
+* **polling** — entered at synchronization points (barriers, end of program)
+  or when the descriptor pool is exhausted.  The master then (i) drains the
+  ready queue, (ii) polls worker queues for completed descriptors, and
+  (iii) releases completed tasks' dependencies from the completion queue.
+
+Release is *lazy* (§3.6): completed tasks are collected into the completion
+queue and their dependents' counters are only decremented when the master
+idles or needs resources, keeping release off the critical path.
+"""
+from __future__ import annotations
+
+import random
+from typing import Callable, Sequence
+
+from .deps import DependenceAnalyzer
+from .graph import DescriptorPool, TaskDescriptor, TaskGraph, TaskState
+from .mpb import MPBQueue
+
+__all__ = ["MasterScheduler", "POLICIES"]
+
+
+def _rr_policy(sched: "MasterScheduler", td: TaskDescriptor) -> Sequence[int]:
+    """Round-robin over workers, starting after the last one used."""
+    n = len(sched.queues)
+    start = (sched._rr_last + 1) % n
+    sched._rr_last = start
+    return [(start + i) % n for i in range(n)]
+
+
+def _locality_policy(sched: "MasterScheduler", td: TaskDescriptor) -> Sequence[int]:
+    """Prefer the worker whose cache most recently produced one of this
+    task's input blocks (tile-affinity; the paper's locality discussion in
+    §4.1/§6 — tasks with good cache locality scale best)."""
+    votes: dict[int, int] = {}
+    for mode in td.args:
+        if not mode.READS:
+            continue
+        for block in mode.region.block_ids:
+            w = sched.block_last_worker.get(block)
+            if w is not None:
+                votes[w] = votes.get(w, 0) + 1
+    order = sorted(votes, key=votes.get, reverse=True)
+    rest = [w for w in _rr_policy(sched, td) if w not in votes]
+    return order + rest
+
+
+def _random_policy(sched: "MasterScheduler", td: TaskDescriptor) -> Sequence[int]:
+    order = list(range(len(sched.queues)))
+    sched._rng.shuffle(order)
+    return order
+
+
+POLICIES: dict[str, Callable] = {
+    "round_robin": _rr_policy,
+    "locality": _locality_policy,
+    "random": _random_policy,
+}
+
+
+class MasterScheduler:
+    """Drives the four task stages over a set of per-worker MPB queues."""
+
+    def __init__(self, queues: list[MPBQueue], graph: TaskGraph,
+                 pool: DescriptorPool, analyzer: DependenceAnalyzer,
+                 policy: str = "round_robin", seed: int = 0):
+        self.queues = queues
+        self.graph = graph
+        self.pool = pool
+        self.analyzer = analyzer
+        self.policy = POLICIES[policy]
+        self.block_last_worker: dict = {}
+        self._rr_last = -1
+        self._rng = random.Random(seed)
+        # stats
+        self.polling_rounds = 0
+        self.tasks_scheduled = 0
+
+    # -- running-mode scheduling (§3.4 first half) ---------------------------
+    def schedule_running(self, td: TaskDescriptor) -> None:
+        """Try exactly one worker (the policy's first choice); on rejection
+        park the task in the local ready queue and return — the main program
+        resumes immediately."""
+        order = self.policy(self, td)
+        wid = order[0]
+        accepted, collected = self.queues[wid].try_put(td)
+        if collected is not None:
+            self._collect(collected)
+        if accepted:
+            self.tasks_scheduled += 1
+            self._note_placement(td, wid)
+        else:
+            self.graph.ready.append(td)
+
+    # -- polling-mode scheduling (§3.4 second half) ----------------------------
+    def schedule_polling(self, td: TaskDescriptor) -> bool:
+        """Try every worker in policy order; if all queues are full, release
+        one completed task and retry once (the paper releases and retries
+        the *first* task)."""
+        for attempt in range(2):
+            for wid in self.policy(self, td):
+                accepted, collected = self.queues[wid].try_put(td)
+                if collected is not None:
+                    self._collect(collected)
+                if accepted:
+                    self.tasks_scheduled += 1
+                    self._note_placement(td, wid)
+                    return True
+            if attempt == 0:
+                self.poll_workers()
+                if not self.release_one():
+                    # nothing completed yet; caller decides whether to spin
+                    return False
+        return False
+
+    def _note_placement(self, td: TaskDescriptor, wid: int) -> None:
+        for mode in td.outputs:
+            for block in mode.region.block_ids:
+                self.block_last_worker[block] = wid
+
+    # -- polling-mode functions (i)-(iii) ----------------------------------------
+    def drain_ready(self) -> None:
+        """(i) schedule tasks from the local ready queue."""
+        n = len(self.graph.ready)
+        for _ in range(n):
+            if not self.graph.ready:
+                break
+            td = self.graph.ready.popleft()
+            if not self.schedule_polling(td):
+                self.graph.ready.appendleft(td)
+                break
+
+    def poll_workers(self) -> int:
+        """(ii) discover descriptors marked completed; move them to the
+        completion queue."""
+        found = 0
+        for q in self.queues:
+            for td in q.collect_completed():
+                self._collect(td)
+                found += 1
+        return found
+
+    def _collect(self, td: TaskDescriptor) -> None:
+        self.graph.mark_executed(td)
+        self.graph.completion.append(td)
+
+    def release_one(self) -> bool:
+        """(iii) release one completed task's dependencies (lazy, §3.6)."""
+        if not self.graph.completion:
+            return False
+        td = self.graph.completion.popleft()
+        for ready in self.graph.release(td):
+            self.graph.ready.append(ready)
+        self.analyzer.forget_completed(td)
+        self.pool.release(td)
+        return True
+
+    def release_all(self) -> None:
+        while self.release_one():
+            pass
+
+    # -- the polling loop itself --------------------------------------------------
+    def polling_step(self) -> None:
+        """One iteration of the master's polling mode."""
+        self.polling_rounds += 1
+        self.drain_ready()
+        self.poll_workers()
+        self.release_all()

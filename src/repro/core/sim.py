@@ -1,0 +1,261 @@
+"""Discrete-event simulation of the BDDT-SCC runtime on the SCC.
+
+Replays the exact runtime protocol of §3.3-§3.6 — master spawns with
+dependence-analysis cost, running-mode single-attempt scheduling into
+bounded MPB rings, polling mode at barriers, lazy collection and release —
+against the calibrated hardware model of ``costmodel.py`` (hop-dependent
+DRAM latency, per-MC contention, whole-L2 flush/invalidate).  Workloads are
+task graphs annotated with per-task flops / bytes / block homes, generated
+by ``benchmarks.workloads`` for the paper's five applications.
+
+This is how the reproduction validates the paper's *findings* without SCC
+silicon: Fig 5 (scalability curves and their saturation points), Fig 6
+(idle / application / flush breakdowns growing with contention), Fig 7
+(per-worker load balance), and the master-bottleneck onset.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+
+from .costmodel import (SCCParams, core_core_hops, core_mc_hops,
+                        master_core_choice, worker_order)
+
+__all__ = ["SimTask", "SimResult", "simulate", "sequential_time"]
+
+
+@dataclass
+class SimTask:
+    """One task of a workload graph."""
+    tid: int
+    flops: float
+    mem_bytes: float
+    homes: tuple[int, ...]            # MCs serving this task's blocks
+    deps: tuple[int, ...] = ()        # tids this task waits for
+    n_blocks: int = 1                 # footprint size (dep-analysis cost)
+
+    # simulation state (reset per run)
+    deps_remaining: int = 0
+    dependents: list = field(default_factory=list)
+
+
+@dataclass
+class WorkerState:
+    core: int
+    mc_hops: list[int]
+    queue: list = field(default_factory=list)   # FIFO of queued tasks
+    running: object = None
+    free_at: float = 0.0
+    busy_s: float = 0.0
+    flush_s: float = 0.0
+    tasks_run: int = 0
+    inflight: int = 0
+
+
+@dataclass
+class SimResult:
+    total_s: float
+    worker_busy_s: list[float]
+    worker_flush_s: list[float]
+    worker_idle_s: list[float]
+    worker_tasks: list[int]
+    master_busy_s: float
+    tasks: int
+
+    @property
+    def breakdown(self) -> dict:
+        return {
+            "app_s": sum(self.worker_busy_s),
+            "flush_s": sum(self.worker_flush_s),
+            "idle_s": sum(self.worker_idle_s),
+        }
+
+
+def sequential_time(tasks: list[SimTask], p: SCCParams,
+                    master: int | None = None) -> float:
+    """The paper's baseline: the original program on the master core, all
+    memory served by the nearest controller, no contention, no flushes."""
+    master = master if master is not None else master_core_choice()
+    near = min(range(4), key=lambda m: core_mc_hops(master, m))
+    h = core_mc_hops(master, near)
+    t = 0.0
+    for task in tasks:
+        t += p.compute_time_s(task.flops)
+        t += p.mem_time_s(task.mem_bytes, h, concurrent=1)
+    return t
+
+
+def simulate(tasks: list[SimTask], n_workers: int,
+             p: SCCParams = SCCParams(), *, mpb_slots: int = 16,
+             placement_aware: bool = True) -> SimResult:
+    """Run the master/worker protocol over the task graph."""
+    master = master_core_choice()
+    cores = worker_order(master)[:n_workers]
+    workers = [WorkerState(core=c,
+                           mc_hops=[core_mc_hops(c, m) for m in range(4)])
+               for c in cores]
+    mpb_hops = [core_core_hops(master, c) for c in cores]
+
+    # reset graph state
+    by_id = {t.tid: t for t in tasks}
+    for t in tasks:
+        t.deps_remaining = len(t.deps)
+        t.dependents = []
+    for t in tasks:
+        for d in t.deps:
+            by_id[d].dependents.append(t)
+
+    # per-MC load: sum of memory-boundedness fractions of active tasks
+    # (a compute-bound task barely contends; Fig 4's hammering cores have
+    # fraction ~1)
+    mc_active = [0.0, 0.0, 0.0, 0.0]
+    mem_frac: dict[int, float] = {}
+
+    # event heap: (finish_time, seq, worker_idx, task)
+    events: list = []
+    seq = 0
+
+    ready: list[SimTask] = [t for t in tasks if t.deps_remaining == 0]
+    pending_spawn = list(tasks)       # program order
+    spawned = set()
+    completion: list[SimTask] = []
+    executed: dict[int, float] = {}   # tid -> finish time
+    collected: set[int] = set()
+
+    master_t = 0.0
+    rr = 0
+
+    def exec_time(w: WorkerState, task: SimTask) -> tuple[float, float]:
+        comp = p.compute_time_s(task.flops)
+        share = task.mem_bytes / max(len(task.homes), 1)
+        mem0 = sum(p.mem_time_s(share, w.mc_hops[mc], concurrent=1)
+                   for mc in task.homes)
+        f = mem0 / max(mem0 + comp, 1e-12)
+        mem_frac[task.tid] = f
+        mem = 0.0
+        for mc in task.homes:
+            conc = 1.0 + max(mc_active[mc], 0.0)   # others + me
+            mem += p.mem_time_s(share, w.mc_hops[mc], concurrent=conc)
+        fl = p.seconds(p.flush_cycles + p.invalidate_cycles)
+        return comp + mem, fl
+
+    def begin(widx: int, task: SimTask, t0: float):
+        """Worker starts executing: contention is sampled NOW (queued
+        descriptors in the MPB don't touch memory)."""
+        nonlocal seq
+        w = workers[widx]
+        start = max(w.free_at, t0)
+        dur, fl = exec_time(w, task)
+        for mc in task.homes:
+            mc_active[mc] += mem_frac[task.tid]
+        w.running = task
+        w.free_at = start + dur + fl
+        w.busy_s += dur
+        w.flush_s += fl
+        w.tasks_run += 1
+        seq += 1
+        heapq.heappush(events, (w.free_at, seq, widx, task))
+
+    def enqueue(widx: int, task: SimTask, t0: float):
+        w = workers[widx]
+        w.inflight += 1
+        if w.running is None:
+            begin(widx, task, t0)
+        else:
+            w.queue.append(task)
+
+    def try_schedule(task: SimTask, t: float, single_attempt: bool) -> bool:
+        """Master appends to a worker's MPB ring (§3.4)."""
+        nonlocal rr, master_t
+        order = range(len(workers))
+        if placement_aware:
+            # prefer emptier queues, then closer workers (hop cost)
+            order = sorted(order, key=lambda i: (workers[i].inflight,
+                                                 mpb_hops[i]))
+        else:
+            order = [(rr + i) % len(workers) for i in range(len(workers))]
+            rr += 1
+        for widx in order:
+            w = workers[widx]
+            if w.inflight < mpb_slots:
+                master_t += p.seconds(p.schedule_cycles) + \
+                    p.mpb_write_s(mpb_hops[widx])
+                enqueue(widx, task, master_t)
+                return True
+            master_t += p.seconds(p.poll_cycles)   # slot check only
+            if single_attempt:
+                return False
+        return False
+
+    def collect_finished(t_now: float):
+        """Pop all finish events up to t_now; mark slots completed."""
+        while events and events[0][0] <= t_now:
+            ft, _, widx, task = heapq.heappop(events)
+            w = workers[widx]
+            for mc in task.homes:
+                mc_active[mc] -= mem_frac[task.tid]
+            w.running = None
+            if w.queue:
+                begin(widx, w.queue.pop(0), ft)
+            w.inflight -= 1
+            executed[task.tid] = ft
+            completion.append(task)
+
+    def release_all(t: float):
+        nonlocal master_t
+        while completion:
+            task = completion.pop()
+            master_t += p.seconds(p.release_cycles)
+            for dep in task.dependents:
+                dep.deps_remaining -= 1
+                if dep.deps_remaining == 0:
+                    ready.append(dep)
+
+    # ---- phase 1: main program spawns every task (running mode, §3.4):
+    # one scheduling attempt for the newly spawned task only; on rejection
+    # it joins the local ready queue and the main program continues --------
+    ready.clear()
+    for task in pending_spawn:
+        master_t += p.seconds(p.spawn_base_cycles +
+                              p.dep_block_cycles * task.n_blocks)
+        spawned.add(task.tid)
+        collect_finished(master_t)
+        if task.deps_remaining == 0:
+            if not try_schedule(task, master_t, single_attempt=True):
+                ready.append(task)
+
+    # ---- phase 2: barrier — polling mode (§3.4 / §3.6) ---------------------
+    n_total = len(tasks)
+    while len(executed) < n_total or ready or completion:
+        progressed = False
+        collect_finished(master_t)
+        release_all(master_t)
+        still = []
+        for r in ready:
+            master_t += p.seconds(p.poll_cycles)
+            if try_schedule(r, master_t, single_attempt=False):
+                progressed = True
+            else:
+                still.append(r)
+        ready[:] = still
+        if not progressed:
+            if events:
+                # idle until the next completion
+                master_t = max(master_t, events[0][0])
+                collect_finished(master_t)
+                release_all(master_t)
+            elif not ready:
+                break
+        master_t += p.seconds(p.poll_cycles * len(workers))
+
+    total = max([master_t] + [w.free_at for w in workers])
+    idle = [max(total - w.busy_s - w.flush_s, 0.0) for w in workers]
+    return SimResult(
+        total_s=total,
+        worker_busy_s=[w.busy_s for w in workers],
+        worker_flush_s=[w.flush_s for w in workers],
+        worker_idle_s=idle,
+        worker_tasks=[w.tasks_run for w in workers],
+        master_busy_s=master_t,
+        tasks=len(tasks),
+    )

@@ -1,0 +1,4 @@
+"""Data pipeline."""
+from .pipeline import SyntheticTokens, make_batch_specs
+
+__all__ = ["SyntheticTokens", "make_batch_specs"]

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+The paper's five benchmarks (Black-Scholes, Matrix-Multiply, FFT, Jacobi,
+Cholesky) are the workloads whose tile tasks dominate compute; each gets a
+Pallas kernel (``kernel.py``), a jitted public wrapper (``ops.py``) and a
+pure-jnp oracle (``ref.py``).  ``flash_attention`` / ``flash_decode`` are the
+LM-substrate hot-spots.  All kernels target TPU (MXU-aligned BlockSpecs,
+VMEM-resident working sets) and are validated on CPU in interpret mode
+against the oracles.
+
+Models and the dry-run use the jnp reference paths by default (this
+container lowers for CPU); ``ops.py`` wrappers take ``use_pallas=...`` /
+``interpret=...`` so the same call sites run the Pallas path on real TPU.
+"""

@@ -1,0 +1,56 @@
+"""Pallas TPU kernel for Black-Scholes pricing.
+
+Layout: options are reshaped to (rows, 128) so the last dimension fills TPU
+vector lanes; the grid tiles rows in ``block_rows`` chunks (8-row multiples
+-> full (8, 128) VREG tiles).  Purely elementwise, so one VMEM block per
+input/output and no scratch.  The erf-based normal CDF runs on the VPU.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.scipy.special import erf
+
+_SQRT2 = 1.4142135623730951
+
+
+def _ncdf(x):
+    return 0.5 * (1.0 + erf(x / _SQRT2))
+
+
+def _bs_kernel(spot_ref, strike_ref, t_ref, rate_ref, vol_ref,
+               call_ref, put_ref):
+    spot = spot_ref[...]
+    strike = strike_ref[...]
+    t = t_ref[...]
+    rate = rate_ref[...]
+    vol = vol_ref[...]
+    sqrt_t = jnp.sqrt(t)
+    d1 = (jnp.log(spot / strike) + (rate + 0.5 * vol * vol) * t) / (vol * sqrt_t)
+    d2 = d1 - vol * sqrt_t
+    disc = strike * jnp.exp(-rate * t)
+    call_ref[...] = spot * _ncdf(d1) - disc * _ncdf(d2)
+    put_ref[...] = disc * _ncdf(-d2) - spot * _ncdf(-d1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def black_scholes_pallas(spot, strike, t, rate, vol, *, block_rows: int = 256,
+                         interpret: bool = False):
+    """Inputs: (rows, 128) float32 arrays.  Returns (call, put)."""
+    rows, lanes = spot.shape
+    if lanes != 128:
+        raise ValueError("lane dimension must be 128 (reshape in ops.py)")
+    block_rows = min(block_rows, rows)
+    if rows % block_rows != 0:
+        raise ValueError(f"rows {rows} not divisible by block_rows {block_rows}")
+    spec = pl.BlockSpec((block_rows, 128), lambda i: (i, 0))
+    out_shape = jax.ShapeDtypeStruct((rows, 128), jnp.float32)
+    return pl.pallas_call(
+        _bs_kernel,
+        grid=(rows // block_rows,),
+        in_specs=[spec] * 5,
+        out_specs=[spec] * 2,
+        out_shape=[out_shape, out_shape],
+        interpret=interpret,
+    )(spot, strike, t, rate, vol)

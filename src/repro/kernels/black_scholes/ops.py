@@ -1,0 +1,26 @@
+"""Public Black-Scholes op: flat option batches of any length."""
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+
+def black_scholes(spot, strike, t, rate, vol, *, use_pallas: bool = False,
+                  interpret: bool = False, block_rows: int = 256):
+    """Price a flat batch of options.  Inputs: 1-D arrays of equal length.
+
+    ``use_pallas=False`` runs the jnp oracle path (the dry-run/CPU default);
+    ``use_pallas=True`` runs the TPU kernel (``interpret=True`` on CPU).
+    """
+    if not use_pallas:
+        return ref.black_scholes(spot, strike, t, rate, vol)
+    n = spot.shape[0]
+    lanes = 128
+    block_rows = max(1, min(block_rows, -(-n // lanes)))
+    pad = (-n) % (lanes * block_rows)
+    args = [jnp.pad(jnp.asarray(a, jnp.float32), (0, pad),
+                    constant_values=1.0).reshape(-1, lanes)
+            for a in (spot, strike, t, rate, vol)]
+    call, put = kernel.black_scholes_pallas(
+        *args, block_rows=block_rows, interpret=interpret)
+    return call.reshape(-1)[:n], put.reshape(-1)[:n]

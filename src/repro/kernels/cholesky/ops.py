@@ -1,0 +1,19 @@
+"""Public Cholesky tile ops.
+
+``update`` dispatches to the Pallas trailing-update kernel
+(:func:`repro.kernels.matmul.kernel.tile_update_pallas`); ``potrf`` and
+``trsm`` stay on XLA's triangular primitives (see ref.py for why).
+"""
+from ..matmul import kernel as _mm_kernel
+from . import ref
+
+potrf = ref.potrf
+trsm = ref.trsm
+
+
+def update(c, a, b, *, use_pallas: bool = False, interpret: bool = False,
+           bk: int = 128):
+    if not use_pallas:
+        return ref.update(c, a, b)
+    return _mm_kernel.tile_update_pallas(c, a, b, bk=min(bk, a.shape[1]),
+                                         interpret=interpret)

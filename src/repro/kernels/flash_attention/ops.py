@@ -1,0 +1,94 @@
+"""Public attention op: Pallas flash kernel or jnp paths.
+
+``chunked`` is the lax.scan online-softmax implementation used by the models
+for prefill/training — it has flash's O(S) memory without Pallas, so it
+lowers on any backend (this is what the multi-pod dry-run compiles); the
+Pallas kernel is the TPU hot-spot implementation of the same math.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+_NEG_INF = -1e30
+
+
+def attention(q, k, v, *, causal: bool = True, scale: float | None = None,
+              impl: str = "chunked", q_chunk: int = 512, k_chunk: int = 1024,
+              interpret: bool = False):
+    if impl == "pallas":
+        return kernel.flash_attention_pallas(q, k, v, causal=causal,
+                                             scale=scale, interpret=interpret)
+    if impl == "naive":
+        return ref.mha(q, k, v, causal=causal, scale=scale)
+    if impl == "chunked":
+        return chunked_attention(q, k, v, causal=causal, scale=scale,
+                                 q_chunk=q_chunk, k_chunk=k_chunk)
+    raise ValueError(f"unknown attention impl {impl!r}")
+
+
+def chunked_attention(q, k, v, *, causal: bool = True,
+                      scale: float | None = None, q_chunk: int = 512,
+                      k_chunk: int = 1024):
+    """Online-softmax attention via lax.scan over kv chunks, vmapped over q
+    chunks.  Memory: O(bq * bk) scores per (b, h) instead of O(Sq * Skv).
+    Supports d_v != d_qk (MLA-style asymmetric heads)."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    dv = v.shape[-1]
+    if hq != hkv:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = scale if scale is not None else float(d) ** -0.5
+    bq = min(q_chunk, sq)
+    bk = min(k_chunk, skv)
+    if sq % bq or skv % bk:
+        # fall back to one chunk rather than failing on odd lengths
+        bq, bk = sq, skv
+    nq, nk = sq // bq, skv // bk
+    kv_off = skv - sq
+
+    qc = q.reshape(b, hq, nq, bq, d).astype(jnp.float32)
+    kc = k.reshape(b, hq, nk, bk, d).astype(jnp.float32)
+    vc = v.reshape(b, hq, nk, bk, dv).astype(jnp.float32)
+
+    @functools.partial(jax.checkpoint, policy=None)
+    def q_block(iq, qb):
+        # qb: (b, hq, bq, d).  checkpointed: backward recomputes the
+        # (bq, bk) score blocks instead of saving them — flash-attention
+        # memory behaviour without Pallas (the Pallas kernel is the TPU
+        # hot-spot path; this is what every backend can lower).
+        @jax.checkpoint
+        def kv_step(carry, ik_kb_vb):
+            m, l, acc = carry
+            ik, kb, vb = ik_kb_vb
+            s = jnp.einsum("bhqd,bhkd->bhqk", qb, kb) * scale
+            if causal:
+                qpos = iq * bq + jnp.arange(bq)[:, None] + kv_off
+                kpos = ik * bk + jnp.arange(bk)[None, :]
+                s = jnp.where(kpos <= qpos, s, _NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vb)
+            return (m_new, l, acc), None
+
+        init = (jnp.full((b, hq, bq), _NEG_INF, jnp.float32),
+                jnp.zeros((b, hq, bq), jnp.float32),
+                jnp.zeros((b, hq, bq, dv), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, init,
+            (jnp.arange(nk), jnp.moveaxis(kc, 2, 0), jnp.moveaxis(vc, 2, 0)))
+        l = jnp.where(l == 0.0, 1.0, l)
+        # cast per chunk: the stacked output stays in the compute dtype
+        # (f32 stacking doubled the live set on 32k prefill)
+        return (acc / l[..., None]).astype(q.dtype)
+
+    out = jax.lax.map(lambda args: q_block(*args),
+                      (jnp.arange(nq), jnp.moveaxis(qc, 2, 0)))
+    out = jnp.moveaxis(out, 0, 2).reshape(b, hq, sq, dv)
+    return out

@@ -1,0 +1,27 @@
+"""Naive-softmax oracle for multi-head attention (small shapes only)."""
+import jax.numpy as jnp
+
+
+def mha(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D); GQA via head repetition.
+
+    Returns (B, Hq, Sq, D) in q's dtype; f32 softmax internally.
+    """
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    if hq != hkv:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        # query i attends to keys <= i + (skv - sq)  (suffix alignment)
+        qpos = jnp.arange(sq)[:, None] + (skv - sq)
+        kpos = jnp.arange(skv)[None, :]
+        s = jnp.where(kpos <= qpos, s, -jnp.inf)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

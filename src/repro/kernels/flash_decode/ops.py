@@ -1,0 +1,32 @@
+"""Public decode-attention ops, including the sequence-sharded form."""
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+
+def decode_attention(q, k, v, *, scale: float | None = None,
+                     use_pallas: bool = False, interpret: bool = False,
+                     bk: int = 512):
+    """Full (unsharded) decode attention for one new token."""
+    if not use_pallas:
+        return ref.decode_mha(q, k, v, scale=scale)
+    o, lse = kernel.flash_decode_pallas(q, k, v, scale=scale, bk=bk,
+                                        interpret=interpret)
+    return o.astype(q.dtype)
+
+
+def decode_partial(q, k, v, *, scale: float | None = None, mask=None,
+                   use_pallas: bool = False, interpret: bool = False,
+                   bk: int = 512):
+    """Per-shard partial: (o_f32, lse).  Combine with
+    :func:`ref.combine_partials` or a psum-based merge under shard_map."""
+    if not use_pallas:
+        return ref.decode_partial(q, k, v, scale=scale, mask=mask)
+    if mask is not None:
+        raise NotImplementedError("mask only on the jnp path; pad KV shards "
+                                  "to the block size instead")
+    return kernel.flash_decode_pallas(q, k, v, scale=scale, bk=bk,
+                                      interpret=interpret)
+
+
+combine_partials = ref.combine_partials

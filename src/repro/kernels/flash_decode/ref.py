@@ -1,0 +1,65 @@
+"""Oracles for single-token decode attention and its sharded combine.
+
+Decode attention is memory-bound (the whole KV cache streams past one
+query), so BDDT-SCC's placement lesson applies directly: the KV cache is
+*striped along the sequence axis* across devices (the "memory controllers"),
+each shard computes a partial attention, and the partials combine exactly
+via log-sum-exp — the explicit-communication analogue of the paper's
+balanced memory traffic.
+"""
+import jax.numpy as jnp
+
+
+def decode_mha(q, k, v, *, scale: float | None = None):
+    """q: (B, Hq, D) one new token; k, v: (B, Hkv, S, D) -> (B, Hq, D)."""
+    b, hq, d = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    if hq != hkv:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = scale if scale is not None else float(d) ** -0.5
+    logits = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    w = jnp.exp(logits - logits.max(-1, keepdims=True))
+    w = w / w.sum(-1, keepdims=True)
+    out = jnp.einsum("bhs,bhsd->bhd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_partial(q, k, v, *, scale: float | None = None,
+                   mask=None):
+    """Partial attention over a KV shard.
+
+    Returns (o, lse): o is the shard-normalized output (B, Hq, D) in f32 and
+    lse the shard log-sum-exp (B, Hq).  ``mask``: optional (B, S) bool of
+    valid positions (False entries are padding).
+    """
+    b, hq, d = q.shape
+    hkv = k.shape[1]
+    if hq != hkv:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = scale if scale is not None else float(d) ** -0.5
+    logits = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if mask is not None:
+        logits = jnp.where(mask[:, None, :], logits, -1e30)
+    m = logits.max(-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    l = p.sum(-1, keepdims=True)
+    safe_l = jnp.where(l == 0.0, 1.0, l)
+    o = jnp.einsum("bhs,bhsd->bhd", p / safe_l, v.astype(jnp.float32))
+    lse = (m + jnp.log(safe_l))[..., 0]
+    lse = jnp.where(l[..., 0] == 0.0, -1e30, lse)
+    return o, lse
+
+
+def combine_partials(outs, lses):
+    """Combine shard partials: outs (N, B, Hq, D) f32, lses (N, B, Hq)."""
+    m = lses.max(0)
+    w = jnp.exp(lses - m)                       # (N, B, Hq)
+    denom = w.sum(0)
+    out = (outs * w[..., None]).sum(0) / denom[..., None]
+    return out

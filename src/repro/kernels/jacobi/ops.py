@@ -1,0 +1,16 @@
+"""Public Jacobi op."""
+from . import kernel, ref
+
+
+def jacobi_step(x, *, use_pallas: bool = False, interpret: bool = False,
+                block_rows: int = 256):
+    if not use_pallas:
+        return ref.jacobi_step(x)
+    return kernel.jacobi_step_pallas(x, block_rows=min(block_rows, x.shape[0]),
+                                     interpret=interpret)
+
+
+def jacobi(x, iters: int = 1, **kw):
+    for _ in range(iters):
+        x = jacobi_step(x, **kw)
+    return x

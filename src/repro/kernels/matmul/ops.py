@@ -1,0 +1,23 @@
+"""Public matmul ops used by the paper-benchmark tasks and the models."""
+from . import kernel, ref
+
+
+def matmul(a, b, c=None, *, use_pallas: bool = False,
+           interpret: bool = False, bm: int = 128, bn: int = 128,
+           bk: int = 128):
+    """``c + a @ b`` (``c`` optional)."""
+    if not use_pallas:
+        return ref.matmul(a, b, c)
+    import jax.numpy as jnp
+    if c is None:
+        c = jnp.zeros((a.shape[0], b.shape[1]), a.dtype)
+    return kernel.matmul_pallas(a, b, c, bm=bm, bn=bn, bk=bk,
+                                interpret=interpret)
+
+
+def tile_update(c, a, b, *, use_pallas: bool = False,
+                interpret: bool = False, bk: int = 128):
+    """``c - a @ b^T`` — GEMM/SYRK trailing update for tiled Cholesky."""
+    if not use_pallas:
+        return ref.tile_update(c, a, b)
+    return kernel.tile_update_pallas(c, a, b, bk=bk, interpret=interpret)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the tiled matmul benchmark."""
+import jax.numpy as jnp
+
+
+def matmul(a, b, c=None):
+    """``c + a @ b`` (``c`` defaults to zero), f32 accumulation."""
+    out = jnp.matmul(a, b, preferred_element_type=jnp.float32)
+    if c is not None:
+        out = c.astype(jnp.float32) + out
+    return out.astype(a.dtype)
+
+
+def tile_update(c, a, b):
+    """Cholesky-style trailing update: ``c - a @ b^T`` (f32 accumulation)."""
+    prod = jnp.matmul(a, b.T, preferred_element_type=jnp.float32)
+    return (c.astype(jnp.float32) - prod).astype(c.dtype)

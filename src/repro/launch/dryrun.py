@@ -1,0 +1,243 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes and record memory/cost/collective statistics.
+
+This is the proof that the distribution config is coherent: a sharding
+mismatch, compile-time OOM or unsupported collective fails the cell.
+
+The XLA_FLAGS line above MUST run before any other import — jax locks the
+device count on first init.  Results land in ``experiments/dryrun/`` as one
+JSON per (arch, shape, mesh); EXPERIMENTS.md tables are generated from
+them by ``benchmarks.roofline``.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+        --mesh both [--skip-existing]
+"""
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .. import dist
+from ..configs import ARCH_IDS, SHAPES, applicable_shapes, get_config, \
+    input_specs
+from ..dist.sharding import (batch_shardings, cache_shardings,
+                             default_policy, param_shardings)
+from ..models import api
+from ..optim.adamw import AdamWState, adamw_init
+from .flopcount import count_step
+from .hlo_stats import collective_stats, memory_stats
+from .mesh import make_production_mesh
+from .train import build_train_step
+
+HW = {  # TPU v5e
+    "peak_flops_bf16": 197e12,
+    "hbm_gbps": 819e9,
+    "ici_link_gbps": 50e9,
+}
+
+
+def _abstract_params(cfg, *, serving: bool = False):
+    p = jax.eval_shape(lambda: api.init_params(jax.random.PRNGKey(0), cfg))
+    if serving:
+        # inference deployments load bf16 weights (no optimizer master
+        # copies to protect); matrices cast, small vectors stay f32
+        p = jax.tree_util.tree_map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, jnp.bfloat16)
+            if l.ndim >= 2 and jnp.issubdtype(l.dtype, jnp.floating)
+            else l, p)
+    return p
+
+
+def _mesh_ctx(multi_pod: bool, *, model_in_batch: bool = False):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    return mesh, dict(data_axes=("data",), model_axis="model",
+                      pod_axis="pod" if multi_pod else None,
+                      model_in_batch=model_in_batch)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, *,
+               policy: str | None = None, n_layers: int | None = None):
+    """Lower + compile one cell; returns (record, compiled)."""
+    import dataclasses
+    cfg = get_config(arch)
+    if n_layers is not None:
+        cfg = dataclasses.replace(cfg, n_layers=n_layers)
+    spec = SHAPES[shape_name]
+    # recurrent families: the model axis joins data parallelism for
+    # train/prefill (per-step TP resharding is pathological; §Perf)
+    chips = 512 if multi_pod else 256
+    mib = (cfg.family in ("hybrid", "ssm")
+           and spec.kind in ("train", "prefill")
+           and spec.global_batch % chips == 0)
+    mesh, ctx_kw = _mesh_ctx(multi_pod, model_in_batch=mib)
+    t0 = time.perf_counter()
+    with dist.use_mesh(mesh, **ctx_kw) as ctx:
+        pol = policy or default_policy(cfg)
+        # serving has no optimizer state: FSDP would all-gather weights
+        # every layer for nothing — decode shards weights TP-only
+        # (§Perf, command-r decode cell)
+        if spec.kind == "decode" and pol == "fsdp" \
+                and cfg.family in ("dense", "vlm", "moe", "audio"):
+            pol = "tp"
+        params_abs = _abstract_params(cfg, serving=spec.kind == "decode")
+        p_sh = param_shardings(cfg, params_abs, ctx, policy=pol)
+        specs = input_specs(cfg, shape_name)
+        repl = NamedSharding(mesh, P())
+
+        if spec.kind == "train":
+            opt_abs = jax.eval_shape(adamw_init, params_abs)
+            o_sh = AdamWState(step=repl, mu=p_sh, nu=p_sh)
+            b_sh = batch_shardings(cfg, specs["batch"], ctx)
+            step_fn = build_train_step(cfg)
+            jitted = jax.jit(step_fn,
+                             in_shardings=(p_sh, o_sh, b_sh, repl),
+                             out_shardings=(p_sh, o_sh, None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_abs, opt_abs, specs["batch"],
+                                   jax.ShapeDtypeStruct((), jnp.int32))
+        elif spec.kind == "prefill":
+            b_sh = batch_shardings(cfg, specs["batch"], ctx)
+            cache_abs = jax.eval_shape(
+                lambda p, b: api.prefill_step(p, cfg, b)[1],
+                params_abs, specs["batch"])
+            c_sh = cache_shardings(cfg, cache_abs, ctx)
+            fn = partial(api.prefill_step, cfg=cfg)
+            jitted = jax.jit(
+                lambda params, batch: api.prefill_step(params, cfg, batch),
+                in_shardings=(p_sh, b_sh),
+                out_shardings=(None, c_sh))
+            lowered = jitted.lower(params_abs, specs["batch"])
+        else:  # decode
+            c_sh = cache_shardings(cfg, specs["caches"], ctx)
+            tok_sh = NamedSharding(
+                mesh, P(ctx.all_data_axes
+                        if spec.global_batch % _dp_size(ctx) == 0 else None))
+            jitted = jax.jit(
+                lambda params, tok, caches, pos:
+                api.decode_step(params, cfg, tok, caches, pos),
+                in_shardings=(p_sh, tok_sh, c_sh, repl),
+                out_shardings=(None, c_sh),
+                donate_argnums=(2,))
+            lowered = jitted.lower(params_abs, specs["token"],
+                                   specs["caches"], specs["pos"])
+
+        compiled = lowered.compile()
+
+        # exact global flop/byte accounting from the jaxpr (scan lengths
+        # applied; see flopcount.py — HLO cost analysis counts loop bodies
+        # once and is kept only as "hlo_raw" reference)
+        if spec.kind == "train":
+            jx = count_step(step_fn, params_abs, opt_abs, specs["batch"],
+                            jax.ShapeDtypeStruct((), jnp.int32))
+        elif spec.kind == "prefill":
+            jx = count_step(
+                lambda p, b: api.prefill_step(p, cfg, b),
+                params_abs, specs["batch"])
+        else:
+            jx = count_step(
+                lambda p, t, c, i: api.decode_step(p, cfg, t, c, i),
+                params_abs, specs["token"], specs["caches"], specs["pos"])
+
+    n_dev = mesh.devices.size
+    cost = dict(compiled.cost_analysis() or {})
+    mem = memory_stats(compiled)
+    colls = collective_stats(compiled.as_text())
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": int(n_dev),
+        "policy": pol,
+        "kind": spec.kind,
+        "seq_len": spec.seq_len,
+        "global_batch": spec.global_batch,
+        "compile_s": round(time.perf_counter() - t0, 2),
+        "flops_per_device": float(jx["flops"]) / n_dev,
+        "bytes_per_device": float(jx["bytes"]) / n_dev,
+        "flops_per_device_hlo_raw": float(cost.get("flops", 0.0)),
+        "bytes_per_device_hlo_raw": float(cost.get("bytes accessed", 0.0)),
+        "memory": mem,
+        "collectives": colls.to_dict(),
+    }
+    return record, compiled
+
+
+def _dp_size(ctx):
+    import numpy as np
+    return int(np.prod([ctx.mesh.shape[a] for a in ctx.all_data_axes]))
+
+
+def run_cells(archs, shapes, meshes, out_dir: str, *,
+              skip_existing: bool = False, calibrate: bool = True):
+    os.makedirs(out_dir, exist_ok=True)
+    results = []
+    for arch in archs:
+        cfg = get_config(arch)
+        valid = applicable_shapes(cfg)
+        for shape_name in shapes:
+            if shape_name not in valid:
+                continue
+            for mesh_name in meshes:
+                multi = mesh_name == "multi"
+                tag = f"{arch}__{shape_name}__{'2x16x16' if multi else '16x16'}"
+                path = os.path.join(out_dir, tag + ".json")
+                if skip_existing and os.path.exists(path):
+                    print(f"[dryrun] skip {tag} (exists)")
+                    continue
+                print(f"[dryrun] {tag} ...", flush=True)
+                try:
+                    record, compiled = lower_cell(arch, shape_name, multi)
+                    del compiled
+                except Exception as e:
+                    record = {"arch": arch, "shape": shape_name,
+                              "mesh": "2x16x16" if multi else "16x16",
+                              "error": f"{type(e).__name__}: {e}",
+                              "traceback": traceback.format_exc()[-2000:]}
+                    print(f"[dryrun] FAIL {tag}: {e}", flush=True)
+                with open(path, "w") as f:
+                    json.dump(record, f, indent=1)
+                if "error" not in record:
+                    gb = record["memory"].get("per_device_total_bytes",
+                                              0) / 2**30
+                    print(f"[dryrun] OK {tag}: "
+                          f"{record['flops_per_device']:.3e} flops/dev, "
+                          f"{gb:.2f} GiB/dev, "
+                          f"{record['collectives']['total_link_bytes']:.3e}"
+                          f" link B, {record['compile_s']}s", flush=True)
+                results.append(record)
+    return results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args(argv)
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": ["single"], "multi": ["multi"],
+              "both": ["single", "multi"]}[args.mesh]
+    results = run_cells(archs, shapes, meshes, args.out,
+                        skip_existing=args.skip_existing)
+    n_ok = sum(1 for r in results if "error" not in r)
+    print(f"[dryrun] {n_ok}/{len(results)} cells OK")
+    if n_ok != len(results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,209 @@
+"""Parse compiled HLO text for collective-communication statistics.
+
+``compiled.cost_analysis()`` has no collective accounting, so the roofline's
+communication term comes from here: every all-reduce / all-gather /
+reduce-scatter / all-to-all / collective-permute instruction is parsed for
+its result shape and replica group size, from which we derive
+
+* ``operand_bytes`` — the spec-literal "sum of operand sizes" (operand =
+  result for AR/A2A/CP, result/G for AG, result*G for RS), and
+* ``link_bytes``    — ring-model bytes per device actually crossing ICI
+  links: AR 2*(G-1)/G * R; AG/RS/A2A (G-1)/G * full; CP = R.
+
+The roofline collective term uses ``link_bytes`` (physically meaningful);
+both are recorded.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?((?:\w+\[[\d,]*\](?:\{[^}]*\})?(?:,\s*)?)+)(?:\))?\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+@dataclass
+class CollectiveStats:
+    counts: dict = field(default_factory=lambda: defaultdict(int))
+    operand_bytes: dict = field(default_factory=lambda: defaultdict(float))
+    link_bytes: dict = field(default_factory=lambda: defaultdict(float))
+
+    @property
+    def total_operand_bytes(self) -> float:
+        return float(sum(self.operand_bytes.values()))
+
+    @property
+    def total_link_bytes(self) -> float:
+        return float(sum(self.link_bytes.values()))
+
+    def to_dict(self) -> dict:
+        return {
+            "counts": dict(self.counts),
+            "operand_bytes": {k: float(v)
+                              for k, v in self.operand_bytes.items()},
+            "link_bytes": {k: float(v) for k, v in self.link_bytes.items()},
+            "total_operand_bytes": self.total_operand_bytes,
+            "total_link_bytes": self.total_link_bytes,
+        }
+
+
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)(?:_spmd)?\s*\(.*\)\s*->.*\{\s*$")
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _computations(hlo_text: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        ls = line.rstrip()
+        m = _COMP_HDR_RE.match(ls.strip())
+        if m and ("->" in ls):
+            name = ls.strip().split("(")[0].replace("ENTRY", "").strip() \
+                .lstrip("%").rstrip()
+            cur = name.split()[0] if name else None
+            if cur is not None:
+                comps[cur] = []
+            continue
+        if cur is not None:
+            if ls.strip() == "}":
+                cur = None
+                continue
+            comps[cur].append(ls)
+    return comps
+
+
+def _multipliers(comps: dict[str, list[str]]) -> dict[str, float]:
+    """Computation -> execution count, from while trip counts.
+
+    A scan lowers to ``while(condition=C, body=B)``; the trip count is the
+    iteration-bound constant in C.  Nested scans multiply recursively."""
+    entry = None
+    for name in comps:
+        if name.startswith("main"):
+            entry = name
+    mult: dict[str, float] = {}
+
+    def trip(cond_name: str) -> int:
+        consts = []
+        for line in comps.get(cond_name, []):
+            consts += [int(x) for x in _CONST_RE.findall(line)]
+        return max(consts) if consts else 1
+
+    def visit(name: str, m: float):
+        if name not in comps:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        for line in comps[name]:
+            w = _WHILE_RE.search(line)
+            if w:
+                cond, body = w.group(1), w.group(2)
+                visit(body, m * trip(cond))
+                continue
+            # non-while computation references (fusions, reducers, calls)
+            for ref in re.findall(r"(?:to_apply|calls|called_computations)="
+                                  r"\{?%?([\w\.\-]+)", line):
+                visit(ref, m)
+
+    if entry:
+        visit(entry, 1.0)
+    # anything unreachable (shouldn't happen) counts once
+    for name in comps:
+        mult.setdefault(name, 1.0)
+    return mult
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    comps = _computations(hlo_text)
+    mult = _multipliers(comps)
+    for comp_name, lines in comps.items():
+        m_exec = mult.get(comp_name, 1.0)
+        for line in lines:
+            _accumulate(stats, line, m_exec)
+    if not comps:                      # fallback: flat text
+        for line in hlo_text.splitlines():
+            _accumulate(stats, line, 1.0)
+    return stats
+
+
+def _accumulate(stats: CollectiveStats, line: str, m_exec: float) -> None:
+    if "-done" in line:
+        return
+    m = _COLL_RE.search(line)
+    if not m:
+        return
+    result_bytes = _shape_bytes(m.group(1))
+    kind = m.group(2)
+    g = _group_size(line)
+    stats.counts[kind] += m_exec
+    if kind == "all-reduce":
+        op = result_bytes
+        link = 2.0 * (g - 1) / max(g, 1) * result_bytes
+    elif kind == "all-gather":
+        op = result_bytes / max(g, 1)
+        link = (g - 1) / max(g, 1) * result_bytes
+    elif kind == "reduce-scatter":
+        op = result_bytes * g
+        link = (g - 1) * result_bytes
+    elif kind == "all-to-all":
+        op = result_bytes
+        link = (g - 1) / max(g, 1) * result_bytes
+    else:  # collective-permute
+        op = result_bytes
+        link = result_bytes
+    stats.operand_bytes[kind] += op * m_exec
+    stats.link_bytes[kind] += link * m_exec
+
+
+def memory_stats(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:            # pragma: no cover
+        return {"error": str(e)}
+    out = {}
+    for k in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "alias_size_in_bytes",
+              "temp_size_in_bytes"):
+        out[k] = int(getattr(ma, k, 0))
+    out["per_device_total_bytes"] = (
+        out["argument_size_in_bytes"] + out["output_size_in_bytes"]
+        + out["temp_size_in_bytes"] - out["alias_size_in_bytes"])
+    return out

@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — the dry-run must set XLA_FLAGS before any jax
+initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis
+    carries either data parallelism (default) or pipeline stages."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (tests, elastic restarts onto smaller topologies)."""
+    return jax.make_mesh(
+        tuple(shape), tuple(axes),
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

@@ -1,0 +1,108 @@
+"""Training driver: step builder (used by the dry-run and examples) and a
+CLI for small real runs on local devices.
+
+The train step is one pure function: value_and_grad over the chunked-CE
+loss, global-norm clip, cosine LR, AdamW.  Sharding comes entirely from
+in_shardings/out_shardings at the jit boundary plus the model's internal
+shard_map blocks (EP MoE).  Fault tolerance: checkpoint every
+``--ckpt-every`` steps (async), deterministic data skip-ahead on restart.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .. import dist
+from ..ckpt import latest_step, restore_checkpoint, save_checkpoint
+from ..configs import get_config
+from ..data import SyntheticTokens
+from ..models import api
+from ..optim import adamw_init, adamw_update, clip_by_global_norm, \
+    cosine_schedule
+
+
+def build_train_step(cfg, *, peak_lr: float = 3e-4, warmup: int = 100,
+                     total_steps: int = 10_000, clip: float = 1.0,
+                     weight_decay: float = 0.1):
+    def train_step(params, opt_state, batch, step):
+        loss, grads = jax.value_and_grad(
+            lambda p: api.loss_fn(p, cfg, batch))(params)
+        grads, gnorm = clip_by_global_norm(grads, clip)
+        lr = cosine_schedule(step, peak_lr=peak_lr, warmup_steps=warmup,
+                             total_steps=total_steps)
+        params, opt_state = adamw_update(grads, opt_state, params, lr=lr,
+                                         weight_decay=weight_decay)
+        metrics = {"loss": loss, "gnorm": gnorm, "lr": lr}
+        return params, opt_state, metrics
+    return train_step
+
+
+def train_loop(cfg, *, steps: int, seq_len: int, global_batch: int,
+               seed: int = 0, ckpt_dir: str | None = None,
+               ckpt_every: int = 50, log_every: int = 10,
+               peak_lr: float = 3e-4, resume: bool = True,
+               on_metrics=None):
+    """Single-host training loop (examples / integration tests)."""
+    data = SyntheticTokens(cfg.vocab_size, seq_len, global_batch, seed=seed)
+    params = api.init_params(jax.random.PRNGKey(seed), cfg)
+    opt_state = adamw_init(params)
+    start = 0
+    if ckpt_dir and resume:
+        last = latest_step(ckpt_dir)
+        if last is not None:
+            (params, opt_state), meta, start = restore_checkpoint(
+                ckpt_dir, last, (params, opt_state))
+            start = int(start)
+            print(f"[train] resumed from step {start}")
+
+    step_fn = jax.jit(build_train_step(cfg, peak_lr=peak_lr,
+                                       total_steps=steps))
+    history = []
+    t0 = time.perf_counter()
+    for step in range(start, steps):
+        batch = data.batch_at(step)
+        params, opt_state, metrics = step_fn(params, opt_state, batch,
+                                             jnp.int32(step))
+        if step % log_every == 0 or step == steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step
+            m["wall_s"] = time.perf_counter() - t0
+            history.append(m)
+            print(f"[train] step {step:5d} loss {m['loss']:.4f} "
+                  f"gnorm {m['gnorm']:.3f} lr {m['lr']:.2e}")
+            if on_metrics:
+                on_metrics(m)
+        if ckpt_dir and ckpt_every and (step + 1) % ckpt_every == 0:
+            save_checkpoint(ckpt_dir, step + 1, (params, opt_state),
+                            meta={"arch": cfg.name}, async_save=True)
+    if ckpt_dir:
+        save_checkpoint(ckpt_dir, steps, (params, opt_state),
+                        meta={"arch": cfg.name})
+    return params, opt_state, history
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description="repro trainer")
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-sized config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--peak-lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args(argv)
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    train_loop(cfg, steps=args.steps, seq_len=args.seq_len,
+               global_batch=args.global_batch, ckpt_dir=args.ckpt_dir,
+               peak_lr=args.peak_lr)
+
+
+if __name__ == "__main__":
+    main()

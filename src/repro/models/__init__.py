@@ -1,0 +1,13 @@
+"""Model zoo: the assigned architectures as composable functional JAX modules.
+
+Everything is a pure function over parameter pytrees; layers stack via
+``lax.scan`` over stacked per-layer params (compile-time O(1) in depth) with
+configurable remat.  Attention runs through the chunked online-softmax path
+(Pallas flash kernel on real TPU); decode uses the sequence-sharded
+flash-decode partials.
+"""
+from .api import (count_params, decode_step, forward_logits, init_cache,
+                  init_params, loss_fn, prefill_step)
+
+__all__ = ["init_params", "count_params", "loss_fn", "forward_logits",
+           "prefill_step", "decode_step", "init_cache"]

@@ -1,0 +1,187 @@
+"""Public model API: build init / loss / prefill / decode callables from a
+ModelConfig.  Everything is functional; the trainer and dry-run attach
+shardings at the jit boundary."""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer
+from .layers import cross_entropy_loss, logits_out
+
+
+def init_params(key, cfg):
+    return transformer.init_decoder(key, cfg)
+
+
+def count_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+def _logits_fn(params, cfg):
+    tied = params["embed"]["table"] if cfg.tie_embeddings else None
+    head = params.get("lm_head")
+
+    def f(hidden):
+        lg = logits_out(head, hidden, tied_table=tied)
+        if cfg.logit_softcap:
+            lg = cfg.logit_softcap * jnp.tanh(lg / cfg.logit_softcap)
+        return lg
+    return f
+
+
+# ---------------------------------------------------------------------------
+def loss_fn(params, cfg, batch):
+    """batch: {"tokens": (B, S) int32, "loss_mask": (B, S) opt,
+    "vision_embeds"/"enc_frames": modality stubs}.  Next-token CE."""
+    tokens = batch["tokens"]
+    hidden, _ = transformer.forward(
+        params, cfg, tokens,
+        vision_embeds=batch.get("vision_embeds"),
+        enc_frames=batch.get("enc_frames"),
+        mode="train")
+    labels = jnp.concatenate(
+        [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1)
+    mask = jnp.concatenate(
+        [jnp.ones_like(tokens[:, 1:], dtype=jnp.float32),
+         jnp.zeros_like(tokens[:, :1], dtype=jnp.float32)], axis=1)
+    if batch.get("loss_mask") is not None:
+        mask = mask * batch["loss_mask"].astype(jnp.float32)
+    if cfg.vision_seq:
+        # vision stub positions carry no token labels
+        vis = jnp.arange(tokens.shape[1]) < cfg.vision_seq
+        mask = mask * (~vis[None, :]).astype(jnp.float32)
+    return cross_entropy_loss(_logits_fn(params, cfg), hidden, labels, mask)
+
+
+def forward_logits(params, cfg, batch):
+    """Full-sequence logits (small configs / tests only)."""
+    hidden, _ = transformer.forward(
+        params, cfg, batch["tokens"],
+        vision_embeds=batch.get("vision_embeds"),
+        enc_frames=batch.get("enc_frames"), mode="train")
+    return _logits_fn(params, cfg)(hidden)
+
+
+# ---------------------------------------------------------------------------
+def prefill_step(params, cfg, batch):
+    """Run the prompt; return (last-token logits, caches)."""
+    hidden, caches = transformer.forward(
+        params, cfg, batch["tokens"],
+        vision_embeds=batch.get("vision_embeds"),
+        enc_frames=batch.get("enc_frames"), mode="prefill")
+    logits = _logits_fn(params, cfg)(hidden[:, -1:])
+    return logits, caches
+
+
+def decode_step(params, cfg, token, caches, pos):
+    """One decode step.  token: (B, 1) int32; pos: scalar int32 (the index
+    this token occupies; the KV cache holds `pos` valid entries)."""
+    hidden, caches = transformer.forward(
+        params, cfg, token, mode="decode", caches=caches, pos=pos)
+    logits = _logits_fn(params, cfg)(hidden)
+    return logits, caches
+
+
+# ---------------------------------------------------------------------------
+def init_cache(cfg, batch: int, seq_len: int, dtype=None):
+    """Abstract-friendly cache allocation for decode-shape dry-runs (filled
+    by prefill in real serving)."""
+    dt = jnp.dtype(dtype or cfg.compute_dtype)
+    fam = cfg.family
+    b, s = batch, seq_len
+
+    def attn_cache(n_layers):
+        shape = (n_layers, b, cfg.n_kv_heads, s, cfg.head_dim)
+        return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+    if fam in ("dense", "vlm"):
+        return transformer_cache_tree(attn_cache(cfg.n_layers))
+    if fam == "moe":
+        if cfg.mla:
+            def mla_cache(n):
+                return {"c_kv": jnp.zeros((n, b, s, cfg.kv_lora_rank), dt),
+                        "k_rope": jnp.zeros((n, b, s, cfg.rope_head_dim),
+                                            dt)}
+            out = {"moe": mla_cache(cfg.n_layers - cfg.first_dense)}
+            if cfg.first_dense:
+                out["dense"] = mla_cache(cfg.first_dense)
+            return out
+        out = {"moe": attn_cache(cfg.n_layers - cfg.first_dense)}
+        if cfg.first_dense:
+            out["dense"] = attn_cache(cfg.first_dense)
+        return out
+    if fam == "hybrid":
+        attn_at = transformer._zamba_attn_positions(cfg)
+        bounds = [0] + attn_at + [cfg.n_layers]
+        d_in, n_ssm, h = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+        dh = d_in // h
+        mamba, conv, attn = [], [], []
+        for si in range(len(bounds) - 1):
+            nl = bounds[si + 1] - bounds[si]
+            mamba.append(jnp.zeros((nl, b, h, n_ssm, dh), jnp.float32))
+            conv.append(jnp.zeros((nl, b, cfg.ssm_d_conv - 1,
+                                   d_in + 2 * n_ssm), dt))
+            if si > 0:
+                attn.append({"k": jnp.zeros((b, cfg.n_kv_heads, s,
+                                             cfg.head_dim), dt),
+                             "v": jnp.zeros((b, cfg.n_kv_heads, s,
+                                             cfg.head_dim), dt)})
+        return {"mamba": mamba, "conv": conv, "attn": attn}
+    if fam == "ssm":
+        n_s = transformer._xlstm_slstm_count(cfg)
+        per = (cfg.slstm_every - 1) if n_s else cfg.n_layers
+        n_m = cfg.n_layers - n_s
+        reps = n_s if n_s else 1
+        d_in = cfg.xlstm_d_inner
+        dh = d_in // cfg.n_heads
+        dmh = cfg.d_model // cfg.n_heads
+        ml, mc, sl = [], [], []
+        for r in range(reps):
+            nl = min((r + 1) * per, n_m) - r * per
+            ml.append((jnp.zeros((nl, b, cfg.n_heads, dh, dh), jnp.float32),
+                       jnp.zeros((nl, b, cfg.n_heads, dh), jnp.float32),
+                       jnp.full((nl, b, cfg.n_heads), -1e30, jnp.float32)))
+            mc.append(jnp.zeros((nl, b, cfg.xlstm_d_conv - 1, d_in), dt))
+            if n_s:
+                sl.append((jnp.zeros((b, cfg.n_heads, dmh), jnp.float32),
+                           jnp.zeros((b, cfg.n_heads, dmh), jnp.float32),
+                           jnp.full((b, cfg.n_heads, dmh), -1e30,
+                                    jnp.float32),
+                           jnp.zeros((b, cfg.n_heads, dmh), jnp.float32)))
+        return {"mlstm": ml, "mconv": mc, "slstm": sl}
+    if fam == "audio":
+        return {
+            "self": {"k": jnp.zeros((cfg.n_layers, b, cfg.n_kv_heads, s,
+                                     cfg.head_dim), dt),
+                     "v": jnp.zeros((cfg.n_layers, b, cfg.n_kv_heads, s,
+                                     cfg.head_dim), dt)},
+            "enc_out": jnp.zeros((b, cfg.encoder_seq, cfg.d_model), dt),
+        }
+    raise ValueError(fam)
+
+
+def transformer_cache_tree(c):
+    return c
+
+
+def pad_caches(caches, target_len: int):
+    """Grow every sequence-indexed cache leaf (k/v/c_kv/k_rope, seq axis -2)
+    to ``target_len`` so decode can continue past the prompt length."""
+    def visit(path, leaf):
+        name = ""
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                name = p.key
+                break
+        if name in ("k", "v", "c_kv", "k_rope"):
+            s = leaf.shape[-2]
+            if s < target_len:
+                pad = [(0, 0)] * leaf.ndim
+                pad[-2] = (0, target_len - s)
+                return jnp.pad(leaf, pad)
+        return leaf
+    return jax.tree_util.tree_map_with_path(visit, caches)

@@ -1,0 +1,131 @@
+"""Shared layers: norms, linears, FFN variants, embeddings, losses."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Init = jax.nn.initializers
+
+
+# -- primitives ---------------------------------------------------------------
+def init_linear(key, d_in: int, d_out: int, *, bias: bool = False,
+                scale: float | None = None, dtype=jnp.float32):
+    scale = scale if scale is not None else d_in ** -0.5
+    p = {"w": jax.random.truncated_normal(key, -2, 2, (d_in, d_out),
+                                          dtype) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def init_norm(d: int, kind: str = "rmsnorm", dtype=jnp.float32):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def norm(p, x, kind: str = "rmsnorm", eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    elif kind == "layernorm":
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.var(xf, -1, keepdims=True)
+        xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    else:
+        raise ValueError(kind)
+    y = xf * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# -- FFN variants ---------------------------------------------------------------
+def init_ffn(key, d_model: int, d_ff: int, act: str, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    if act == "swiglu":
+        return {"gate": init_linear(ks[0], d_model, d_ff, dtype=dtype),
+                "up": init_linear(ks[1], d_model, d_ff, dtype=dtype),
+                "down": init_linear(ks[2], d_ff, d_model, dtype=dtype)}
+    # gelu / relu2: plain 2-layer MLP
+    return {"up": init_linear(ks[0], d_model, d_ff, dtype=dtype),
+            "down": init_linear(ks[1], d_ff, d_model, dtype=dtype)}
+
+
+def ffn(p, x, act: str):
+    if act == "swiglu":
+        h = jax.nn.silu(linear(p["gate"], x)) * linear(p["up"], x)
+    elif act == "gelu":
+        h = jax.nn.gelu(linear(p["up"], x), approximate=True)
+    elif act == "relu2":                      # Nemotron squared-ReLU
+        h = jnp.square(jax.nn.relu(linear(p["up"], x)))
+    else:
+        raise ValueError(act)
+    return linear(p["down"], h)
+
+
+# -- embeddings / logits -----------------------------------------------------------
+def init_embedding(key, vocab: int, d_model: int, dtype=jnp.float32):
+    return {"table": jax.random.normal(key, (vocab, d_model), dtype) * 0.02}
+
+
+def embed(p, tokens, scale: float | None = None):
+    e = jnp.take(p["table"], tokens, axis=0)
+    if scale is not None:
+        e = e * scale
+    return e
+
+
+def logits_out(p_head, x, *, tied_table=None, scale: float | None = None):
+    """Project hidden states to the (padded) vocabulary."""
+    if tied_table is not None:
+        w = tied_table.T
+    else:
+        w = p_head["w"]
+    y = x @ w.astype(x.dtype)
+    if scale is not None:
+        y = y * scale
+    return y
+
+
+# -- loss ------------------------------------------------------------------------
+def cross_entropy_loss(logits_fn, hidden, labels, mask, *,
+                       chunk: int = 1024):
+    """Next-token CE computed in sequence chunks so the (B, S, V) logits
+    tensor never materializes (vital for 100k+ vocabularies).
+
+    ``logits_fn``: hidden chunk (B, c, D) -> logits (B, c, V) (possibly
+    vocab-sharded; the max/sum reductions then induce small all-reduces).
+    ``labels``/``mask``: (B, S) int / bool.
+    """
+    b, s, _ = hidden.shape
+    chunk = min(chunk, s)
+    if s % chunk:
+        chunk = s
+    n_chunks = s // chunk
+
+    @jax.checkpoint
+    def body(carry, i):
+        # checkpointed: the (B, c, V) logits chunk is recomputed in the
+        # backward pass instead of being stashed once per chunk
+        tot, cnt = carry
+        h = jax.lax.dynamic_slice_in_dim(hidden, i * chunk, chunk, axis=1)
+        y = jax.lax.dynamic_slice_in_dim(labels, i * chunk, chunk, axis=1)
+        m = jax.lax.dynamic_slice_in_dim(mask, i * chunk, chunk, axis=1)
+        lg = logits_fn(h).astype(jnp.float32)          # (B, c, V)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, y[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * m
+        return (tot + nll.sum(), cnt + m.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)),
+                                 jnp.arange(n_chunks))
+    return tot / jnp.maximum(cnt, 1.0)

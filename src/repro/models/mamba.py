@@ -1,0 +1,178 @@
+"""Mamba2 (SSD) block — chunked state-space duality algorithm.
+
+Training/prefill uses the SSD chunked form evaluated under a ``lax.scan``
+over chunks: within a chunk the recurrence is a masked attention-like
+quadratic (MXU-friendly); across chunks a compact (B, H, N, dh) state is
+carried.  Only one chunk's (B, L, L, H) decay tensor is ever live — the
+scan is the memory fence, exactly the paper's discipline of bounded
+working sets per task.  Decode is the O(1) recurrent update.
+
+Simplifications vs the reference CUDA implementation (recorded in
+DESIGN.md §Arch-applicability): single B/C group (n_groups=1, as in
+zamba2-1.2b), zero initial state, softplus dt with learned per-head bias.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_linear, init_norm, linear, norm
+
+
+def init_mamba(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    d_in = cfg.ssm_d_inner
+    n = cfg.ssm_state
+    h = cfg.ssm_heads
+    ks = jax.random.split(key, 3)
+    d_proj = 2 * d_in + 2 * n + h          # [z, x, B, C, dt]
+    return {
+        "in_proj": init_linear(ks[0], d, d_proj, dtype=dtype),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_d_conv,
+                                            d_in + 2 * n), dtype) * 0.1,
+        "conv_b": jnp.zeros((d_in + 2 * n,), dtype),
+        "A_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((h,), dtype),
+        "D": jnp.ones((h,), dtype),
+        "out_norm": init_norm(d_in, "rmsnorm", dtype),
+        "out_proj": init_linear(ks[2], d_in, d, dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b, *, state=None):
+    """Depthwise causal conv1d.  x: (B, S, C); w: (K, C).
+    With ``state`` (B, K-1, C) given, acts as a streaming step."""
+    w = w.astype(x.dtype)
+    b = b.astype(x.dtype)
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)              # (B, S+K-1, C)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(k))
+    y = y + b[None, None, :]
+    new_state = xp[:, -(k - 1):, :] if k > 1 else None
+    return y, new_state
+
+
+def _split_proj(p, u, cfg):
+    d_in, n, h = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = linear(p["in_proj"], u)
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in:2 * d_in + 2 * n]
+    dt_raw = zxbcdt[..., -h:]
+    return z, xbc, dt_raw
+
+
+def _gates(p, dt_raw):
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))     # (..., H)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))               # (H,)
+    la = dt * a                                                # log decay
+    return dt, la
+
+
+def mamba_chunked(p, u, cfg, *, state=None, conv_state=None,
+                  return_state: bool = False):
+    """u: (B, S, d_model) -> (B, S, d_model).  SSD chunked scan."""
+    b, s, _ = u.shape
+    d_in, n, h = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    dh = d_in // h
+    chunk = min(cfg.ssm_chunk, s)
+    if s % chunk:
+        chunk = s
+    nc = s // chunk
+
+    z, xbc, dt_raw = _split_proj(p, u, cfg)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                   state=conv_state)
+    xbc = jax.nn.silu(xbc)
+    x = xbc[..., :d_in].reshape(b, s, h, dh)
+    Bm = xbc[..., d_in:d_in + n]                               # (B,S,N)
+    Cm = xbc[..., d_in + n:]                                   # (B,S,N)
+    dt, la = _gates(p, dt_raw)                                 # (B,S,H)
+
+    # per-chunk views, chunk axis leading for the scan
+    def chunked(t, shape):
+        return jnp.moveaxis(t.reshape((b, nc, chunk) + shape), 1, 0)
+
+    xc = chunked(x.astype(jnp.float32), (h, dh))               # (nc,B,L,H,dh)
+    Bc = chunked(Bm.astype(jnp.float32), (n,))
+    Cc = chunked(Cm.astype(jnp.float32), (n,))
+    dtc = chunked(dt, (h,))
+    lac = chunked(la, (h,))
+
+    if state is None:
+        state = jnp.zeros((b, h, n, dh), jnp.float32)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def chunk_body(st, inp):
+        xk, bk, ck, dk, lk = inp
+        cum = jnp.cumsum(lk, axis=1)                           # (B,L,H)
+        total = cum[:, -1, :]                                  # (B,H)
+        # intra-chunk masked quadratic
+        gap = cum[:, :, None, :] - cum[:, None, :, :]          # (B,L,L,H)
+        gap = jnp.where(tri[None, :, :, None], gap, -jnp.inf)
+        cb = jnp.einsum("btn,bsn->bts", ck, bk)                # (B,L,L)
+        m = jnp.exp(gap) * (cb[..., None] * dk[:, None, :, :])
+        y = jnp.einsum("btsh,bshd->bthd", m, xk)
+        # inter-chunk: read the carried state
+        y = y + jnp.einsum("btn,bhnd->bthd", ck, st) \
+            * jnp.exp(cum)[..., None]
+        # new carried state
+        w_state = jnp.exp(total[:, None, :] - cum) * dk        # (B,L,H)
+        s_c = jnp.einsum("blh,bln,blhd->bhnd", w_state, bk, xk)
+        st = st * jnp.exp(total)[:, :, None, None] + s_c
+        return st, y
+
+    state_f, ys = jax.lax.scan(chunk_body, state,
+                               (xc, Bc, Cc, dtc, lac))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, dh)
+    y = y + x.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None,
+                                                               :, None]
+    y = y.reshape(b, s, d_in).astype(u.dtype)
+    y = norm(p["out_norm"], y * jax.nn.silu(z), "rmsnorm")
+    out = linear(p["out_proj"], y)
+    if return_state:
+        return out, state_f, conv_state
+    return out
+
+
+def mamba_decode(p, u, cfg, state, conv_state):
+    """One-token recurrent update.  u: (B, 1, d); state (B,H,N,dh) f32;
+    conv_state (B, K-1, d_in + 2N)."""
+    b = u.shape[0]
+    d_in, n, h = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    dh = d_in // h
+    z, xbc, dt_raw = _split_proj(p, u, cfg)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                   state=conv_state)
+    xbc = jax.nn.silu(xbc)
+    x = xbc[:, 0, :d_in].reshape(b, h, dh).astype(jnp.float32)
+    Bm = xbc[:, 0, d_in:d_in + n].astype(jnp.float32)          # (B,N)
+    Cm = xbc[:, 0, d_in + n:].astype(jnp.float32)              # (B,N)
+    dt, la = _gates(p, dt_raw)                                 # (B,1,H)
+    dec = jnp.exp(la[:, 0, :])                                 # (B,H)
+    state = state * dec[:, :, None, None] + jnp.einsum(
+        "bn,bhd,bh->bhnd", Bm, x, dt[:, 0, :])
+    y = jnp.einsum("bn,bhnd->bhd", Cm, state)
+    y = y + x * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, 1, d_in).astype(u.dtype)
+    y = norm(p["out_norm"], y * jax.nn.silu(z), "rmsnorm")
+    return linear(p["out_proj"], y), state, conv_state
+
+
+def mamba_recurrent_ref(p, u, cfg):
+    """Step-by-step oracle for tests."""
+    b, s, _ = u.shape
+    d_in, n, h = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    state = jnp.zeros((b, h, n, d_in // h), jnp.float32)
+    conv_state = jnp.zeros((b, cfg.ssm_d_conv - 1, d_in + 2 * n), u.dtype)
+    outs = []
+    for t in range(s):
+        o, state, conv_state = mamba_decode(p, u[:, t:t + 1], cfg, state,
+                                            conv_state)
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1)

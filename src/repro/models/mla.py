@@ -1,0 +1,128 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV states are compressed into a per-token latent ``c_kv`` (kv_lora_rank wide)
+plus one shared RoPE key (rope_head_dim); per-head K/V are up-projections of
+the latent.  Training materializes per-head K/V and runs flash attention
+with asymmetric head dims (qk = nope+rope, v = v_head_dim).  Decode runs in
+the *absorbed* form: queries are pushed through the K up-projection so
+attention happens directly against the latent cache — the cache is
+(kv_lora_rank + rope_head_dim) per token instead of 2*H*D, which is the
+technique's entire point and maps beautifully onto BDDT-SCC's lesson of
+keeping the data plane small and local.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import dist
+from ..kernels.flash_attention import ops as fa_ops
+from . import rope as rope_mod
+from .layers import init_linear, init_norm, linear, norm
+
+
+def init_mla(key, cfg, dtype=jnp.float32):
+    d, h = cfg.d_model, cfg.n_heads
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    ks = jax.random.split(key, 6)
+    return {
+        # queries: full-rank in V2-Lite (q_lora_rank == 0)
+        "wq": init_linear(ks[0], d, h * (dn + dr), dtype=dtype),
+        # latent down-projection + shared rope key
+        "wkv_a": init_linear(ks[1], d, r + dr, dtype=dtype),
+        "kv_norm": init_norm(r, "rmsnorm", dtype),
+        # per-head up-projections from the latent
+        "wk_b": init_linear(ks[2], r, h * dn, dtype=dtype),
+        "wv_b": init_linear(ks[3], r, h * dv, dtype=dtype),
+        "wo": init_linear(ks[4], h * dv, d, dtype=dtype),
+    }
+
+
+def _project_latent(p, x, cfg, positions):
+    """x -> (c_kv normalized, k_rope rotated): the cacheable quantities."""
+    r, dr = cfg.kv_lora_rank, cfg.rope_head_dim
+    kv = linear(p["wkv_a"], x)                          # (B, S, r + dr)
+    c_kv = norm(p["kv_norm"], kv[..., :r], "rmsnorm")
+    k_rope = kv[..., r:][:, :, None, :].transpose(0, 2, 1, 3)  # (B,1,S,dr)
+    k_rope = rope_mod.apply_rope(k_rope, positions, theta=cfg.rope_theta)
+    return c_kv, k_rope
+
+
+def _project_q(p, x, cfg, positions):
+    b, s, _ = x.shape
+    h, dn, dr = cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim
+    q = linear(p["wq"], x).reshape(b, s, h, dn + dr).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope_mod.apply_rope(q_rope, positions, theta=cfg.rope_theta)
+    return q_nope, q_rope                               # (B,H,S,dn),(B,H,S,dr)
+
+
+def mla_train(p, x, cfg, positions, *, causal: bool = True):
+    """Materialized path: build per-head K/V from the latent, flash-attend."""
+    b, s, _ = x.shape
+    h, dn, dr, dv = (cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim,
+                     cfg.v_head_dim)
+    q_nope, q_rope = _project_q(p, x, cfg, positions)
+    c_kv, k_rope = _project_latent(p, x, cfg, positions)
+    k_nope = linear(p["wk_b"], c_kv).reshape(b, s, h, dn).transpose(0, 2, 1, 3)
+    v = linear(p["wv_b"], c_kv).reshape(b, s, h, dv).transpose(0, 2, 1, 3)
+    q = dist.constrain_heads(jnp.concatenate([q_nope, q_rope], -1))
+    k = dist.constrain_heads(jnp.concatenate([k_nope, jnp.broadcast_to(
+        k_rope, (b, h, s, dr)).astype(k_nope.dtype)], -1))
+    v = dist.constrain_heads(v)
+    scale = (dn + dr) ** -0.5
+    out = dist.constrain_heads(
+        fa_ops.attention(q, k, v, causal=causal, scale=scale,
+                         impl="chunked", q_chunk=cfg.attn_q_chunk,
+                         k_chunk=cfg.attn_k_chunk))
+    return linear(p["wo"], out.transpose(0, 2, 1, 3).reshape(b, s, h * dv))
+
+
+def mla_prefill(p, x, cfg, positions, *, causal: bool = True):
+    out = mla_train(p, x, cfg, positions, causal=causal)
+    c_kv, k_rope = _project_latent(p, x, cfg, positions)
+    return out, {"c_kv": c_kv, "k_rope": k_rope[:, 0]}   # (B,S,r), (B,S,dr)
+
+
+def mla_decode(p, x, cfg, cache, pos, *, update_cache: bool = True):
+    """Absorbed decode against the latent cache.
+
+    cache: {"c_kv": (B, S, r), "k_rope": (B, S, dr)}.
+    scores_h(t) = q_nope_h . (W_uk_h c_t) + q_rope_h . k_rope_t
+                = (W_uk_h^T q_nope_h) . c_t + q_rope_h . k_rope_t
+    out_h = W_uv_h (sum_t softmax_t c_t)  — all against the latent.
+    """
+    b = x.shape[0]
+    h, dn, dr, dv = (cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim,
+                     cfg.v_head_dim)
+    r = cfg.kv_lora_rank
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q_nope, q_rope = _project_q(p, x, cfg, positions)   # (B,H,1,dn/dr)
+    c_new, k_rope_new = _project_latent(p, x, cfg, positions)
+    if update_cache:
+        cache = {
+            "c_kv": jax.lax.dynamic_update_slice_in_dim(
+                cache["c_kv"], c_new.astype(cache["c_kv"].dtype), pos, axis=1),
+            "k_rope": jax.lax.dynamic_update_slice_in_dim(
+                cache["k_rope"], k_rope_new[:, 0].astype(
+                    cache["k_rope"].dtype), pos, axis=1),
+        }
+    c_kv, k_rope = cache["c_kv"], cache["k_rope"]       # (B,S,r),(B,S,dr)
+    s_len = c_kv.shape[1]
+    # absorb q through the K up-projection: (B,H,dn) @ (r,H,dn) -> (B,H,r)
+    wk_b = p["wk_b"]["w"].reshape(r, h, dn)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, :, 0].astype(jnp.float32),
+                       wk_b.astype(jnp.float32))
+    scale = (dn + dr) ** -0.5
+    logits = (jnp.einsum("bhr,bsr->bhs", q_lat, c_kv.astype(jnp.float32)) +
+              jnp.einsum("bhd,bsd->bhs", q_rope[:, :, 0].astype(jnp.float32),
+                         k_rope.astype(jnp.float32))) * scale
+    valid = jnp.arange(s_len) <= pos
+    logits = jnp.where(valid[None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", w, c_kv.astype(jnp.float32))
+    wv_b = p["wv_b"]["w"].reshape(r, h, dv)
+    o = jnp.einsum("bhr,rhv->bhv", o_lat, wv_b.astype(jnp.float32))
+    o = o.reshape(b, 1, h * dv).astype(x.dtype)
+    return linear(p["wo"], o), cache

@@ -1,0 +1,224 @@
+"""Mixture-of-Experts FFN with expert parallelism.
+
+Two implementations of top-k token-choice routing:
+
+* :func:`moe_ffn_ref` — exact dense-gather reference (no capacity drops);
+  O(N * k * d * d_ff) memory for gathered weights, fine for tests/smoke.
+* :func:`moe_ffn_ep` — production path: local counting-sort of token-choices
+  into per-expert capacity buckets, ``all_to_all`` over the EP (``model``)
+  axis to expert owners, expert FFN on contiguous buffers, reverse
+  ``all_to_all``, local weighted un-scatter.  Sort-based dispatch is
+  O(N * k * d) — no one-hot (N, E, C) tensors.  Under a trivial mesh this
+  degenerates to the local computation, so the same code runs everywhere.
+
+The EP layout *is* the paper's placement story: experts are blocks homed on
+"memory controllers" (EP ranks); the router is the allocator striping tokens
+across them; the aux loss keeps the stripes balanced (the paper's uniform-
+distribution requirement); the all-to-all is the explicit communication the
+SCC runtime performs instead of coherence traffic.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .. import dist
+from .layers import init_linear, linear
+
+
+def init_moe(key, cfg, dtype=jnp.float32):
+    d, e, dff = cfg.d_model, cfg.n_experts, cfg.d_expert
+    ks = jax.random.split(key, 5)
+    scale = d ** -0.5
+    p = {
+        "router": init_linear(ks[0], d, e, dtype=dtype),
+        "gate": jax.random.truncated_normal(ks[1], -2, 2, (e, d, dff),
+                                            dtype) * scale,
+        "up": jax.random.truncated_normal(ks[2], -2, 2, (e, d, dff),
+                                          dtype) * scale,
+        "down": jax.random.truncated_normal(ks[3], -2, 2, (e, dff, d),
+                                            dtype) * (dff ** -0.5),
+    }
+    if cfg.n_shared_experts:
+        dsh = cfg.d_expert * cfg.n_shared_experts
+        kss = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "gate": init_linear(kss[0], d, dsh, dtype=dtype),
+            "up": init_linear(kss[1], d, dsh, dtype=dtype),
+            "down": init_linear(kss[2], dsh, d, dtype=dtype),
+        }
+    return p
+
+
+def _router(p, xt, cfg):
+    """xt: (N, d) -> (topv, topi): (N, k) gates and expert ids."""
+    gates = jax.nn.softmax(linear(p["router"], xt).astype(jnp.float32), -1)
+    topv, topi = jax.lax.top_k(gates, cfg.top_k)
+    if cfg.moe_renorm:
+        topv = topv / topv.sum(-1, keepdims=True)
+    return topv, topi, gates
+
+
+def _shared(p, xt):
+    sh = p["shared"]
+    return linear(sh["down"],
+                  jax.nn.silu(linear(sh["gate"], xt)) * linear(sh["up"], xt))
+
+
+def _expert_ffn(xe, gate_w, up_w, down_w, dtype):
+    """xe: (E_l, T, d); weights (E_l, d, dff)/(E_l, dff, d)."""
+    h = jax.nn.silu(jnp.einsum("etd,edf->etf", xe, gate_w.astype(dtype))) \
+        * jnp.einsum("etd,edf->etf", xe, up_w.astype(dtype))
+    return jnp.einsum("etf,efd->etd", h, down_w.astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+def moe_ffn_ref(p, x, cfg):
+    """Exact reference: gather each token's k expert weight blocks."""
+    b, s, d = x.shape
+    xt = x.reshape(-1, d)
+    topv, topi, _ = _router(p, xt, cfg)
+
+    def per_choice(j):
+        gw = p["gate"][topi[:, j]]                     # (N, d, dff)
+        uw = p["up"][topi[:, j]]
+        dw = p["down"][topi[:, j]]
+        h = jax.nn.silu(jnp.einsum("nd,ndf->nf", xt, gw.astype(x.dtype))) \
+            * jnp.einsum("nd,ndf->nf", xt, uw.astype(x.dtype))
+        return jnp.einsum("nf,nfd->nd", h, dw.astype(x.dtype))
+
+    out = sum(topv[:, j, None].astype(x.dtype) * per_choice(j)
+              for j in range(cfg.top_k))
+    if cfg.n_shared_experts:
+        out = out + _shared(p, xt)
+    return out.reshape(b, s, d)
+
+
+# ---------------------------------------------------------------------------
+def _dispatch_local(xt, topv, topi, e: int, capacity: int, dtype):
+    """Counting-sort token-choices into (E, C, d) buckets.  Returns the
+    buffer plus (slot, keep, gate) per choice for the un-scatter."""
+    n, k = topi.shape
+    flat_e = topi.reshape(-1)                           # (N*k,)
+    # stable sort by expert; position within expert via sorted enumeration
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    # rank within run of equal experts
+    pos_sorted = jnp.arange(n * k) - jnp.searchsorted(sorted_e, sorted_e,
+                                                      side="left")
+    pos = jnp.zeros((n * k,), jnp.int32).at[order].set(
+        pos_sorted.astype(jnp.int32))
+    keep = pos < capacity
+    slot = flat_e * capacity + jnp.minimum(pos, capacity - 1)  # (N*k,)
+    src = jnp.repeat(jnp.arange(n), k)
+    buf = jnp.zeros((e * capacity, xt.shape[1]), dtype)
+    buf = buf.at[jnp.where(keep, slot, e * capacity)].add(
+        xt[src], mode="drop")
+    return buf.reshape(e, capacity, -1), slot, keep
+
+
+def _unscatter_local(ye_flat, slot, keep, topv, n: int, k: int, dtype):
+    """ye_flat: (E*C, d) expert outputs -> (N, d) combined by gates."""
+    gathered = jnp.where(keep[:, None], ye_flat[slot], 0.0)    # (N*k, d)
+    w = topv.reshape(-1)[:, None].astype(dtype)
+    return (gathered * w).reshape(n, k, -1).sum(1)
+
+
+def moe_ffn_ep(p, x, cfg, *, capacity_factor: float | None = None):
+    """Expert-parallel MoE.  Uses the ambient mesh context; if none (or the
+    EP axis has size 1) the all_to_alls degenerate to local copies."""
+    ctx = dist.current()
+    cf = capacity_factor if capacity_factor is not None \
+        else cfg.moe_capacity_factor
+    if ctx is None:
+        return _moe_local(p, x, cfg, cf)
+
+    mesh = ctx.mesh
+    ep = ctx.model_axis
+    n_ep = ctx.axis_size(ep)
+    e = cfg.n_experts
+    assert e % n_ep == 0, (e, n_ep)
+
+    batch_axes = ctx.all_data_axes
+
+    def body(p_local, xl):
+        # xl: (b_l, s_l, d); expert weights sharded on E (axis 0)
+        b_l, s_l, d = xl.shape
+        xt = xl.reshape(-1, d)
+        n_l = xt.shape[0]
+        topv, topi, _ = _router(p_local, xt, cfg)
+        capacity = max(1, math.ceil(cf * n_l * cfg.top_k / e))
+        buf, slot, keep = _dispatch_local(xt, topv, topi, e, capacity,
+                                          xl.dtype)
+        # send expert buckets to their owners: (E, C, d) -> (n_ep*E_l, C, d)
+        recv = jax.lax.all_to_all(buf, ep, split_axis=0, concat_axis=0,
+                                  tiled=True)
+        e_l = e // n_ep
+        # (n_ep, E_l, C, d) -> (E_l, n_ep*C, d)
+        recv = recv.reshape(n_ep, e_l, capacity, d).transpose(1, 0, 2, 3) \
+                   .reshape(e_l, n_ep * capacity, d)
+        ye = _expert_ffn(recv, p_local["gate"], p_local["up"],
+                         p_local["down"], xl.dtype)
+        # reverse route
+        back = ye.reshape(e_l, n_ep, capacity, d).transpose(1, 0, 2, 3) \
+                 .reshape(n_ep * e_l, capacity, d)
+        mine = jax.lax.all_to_all(back, ep, split_axis=0, concat_axis=0,
+                                  tiled=True)
+        out = _unscatter_local(mine.reshape(e * capacity, d), slot, keep,
+                               topv, n_l, cfg.top_k, xl.dtype)
+        if cfg.n_shared_experts:
+            out = out + _shared(p_local, xt)
+        return out.reshape(b_l, s_l, d)
+
+    # seq shards over the EP axis when divisible (prefill/train); decode
+    # (s == 1) replicates over EP — each rank then redundantly dispatches
+    # the same tokens, which is correct and negligible for one token.
+    seq_axis = ep if x.shape[1] % n_ep == 0 else None
+    pspec_w = P(ep, None, None)
+    in_specs = (
+        {"router": {"w": P(None, None)},
+         "gate": pspec_w, "up": pspec_w, "down": pspec_w,
+         **({"shared": {k: {"w": P(None, None)} for k in
+             ("gate", "up", "down")}} if cfg.n_shared_experts else {})},
+        P(batch_axes, seq_axis, None),  # batch over DP axes, seq over EP
+    )
+    return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                         out_specs=P(batch_axes, seq_axis, None),
+                         check_vma=False)(p, x)
+
+
+def _moe_local(p, x, cfg, cf):
+    """Single-device sort-based path (identical math, no collectives)."""
+    b, s, d = x.shape
+    xt = x.reshape(-1, d)
+    n_l = xt.shape[0]
+    e = cfg.n_experts
+    topv, topi, _ = _router(p, xt, cfg)
+    capacity = max(1, math.ceil(cf * n_l * cfg.top_k / e))
+    buf, slot, keep = _dispatch_local(xt, topv, topi, e, capacity, x.dtype)
+    ye = _expert_ffn(buf, p["gate"], p["up"], p["down"], x.dtype)
+    out = _unscatter_local(ye.reshape(e * capacity, d), slot, keep, topv,
+                           n_l, cfg.top_k, x.dtype)
+    if cfg.n_shared_experts:
+        out = out + _shared(p, xt)
+    return out.reshape(b, s, d)
+
+
+def moe_ffn(p, x, cfg):
+    if cfg.moe_impl == "ref":
+        return moe_ffn_ref(p, x, cfg)
+    return moe_ffn_ep(p, x, cfg)
+
+
+def load_balance_loss(p, x, cfg):
+    """Switch-style aux loss: E * sum_e f_e * p_e."""
+    d = x.shape[-1]
+    xt = x.reshape(-1, d)
+    topv, topi, gates = _router(p, xt, cfg)
+    frac = jnp.mean(jax.nn.one_hot(topi, cfg.n_experts, dtype=jnp.float32),
+                    axis=(0, 1))
+    prob = gates.mean(0)
+    return cfg.n_experts * jnp.sum(frac * prob)

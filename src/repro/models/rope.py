@@ -1,0 +1,66 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL's M-RoPE.
+
+M-RoPE splits the head dimension into (temporal, height, width) sections,
+each rotated by its own position stream.  For the text/stub modality the
+three streams coincide (documented stub: ``input_specs`` provides
+precomputed patch embeddings, so spatial positions degenerate to sequence
+positions), but the section machinery is implemented faithfully so real
+(t, h, w) streams drop in.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(d_head: int, theta: float = 1e4):
+    return theta ** (-jnp.arange(0, d_head // 2, dtype=jnp.float32)
+                     / (d_head // 2))
+
+
+def apply_rope(x, positions, *, theta: float = 1e4):
+    """x: (B, H, S, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                        # (D/2,)
+    ang = positions[:, None, :, None].astype(jnp.float32) * freqs  # (B,1,S,D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions_thw, sections, *, theta: float = 1e4):
+    """x: (B, H, S, D); positions_thw: (3, B, S); sections: per-stream
+    half-dim sizes summing to D/2 (Qwen2-VL: (16, 24, 24) for D=128)."""
+    d = x.shape[-1]
+    assert sum(sections) == d // 2, (sections, d)
+    freqs = rope_freqs(d, theta)                        # (D/2,)
+    # build the per-frequency position stream by section
+    parts = []
+    off = 0
+    for s_idx, sec in enumerate(sections):
+        pos = positions_thw[s_idx]                      # (B, S)
+        ang = pos[:, None, :, None].astype(jnp.float32) * freqs[off:off + sec]
+        parts.append(ang)
+        off += sec
+    ang = jnp.concatenate(parts, -1)                    # (B, 1, S, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d_model: int):
+    """Whisper-style fixed sinusoidal embeddings (S, D)."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d_model // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (1e4 ** (dim / (d_model // 2)))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+
+
+def sinusoidal_position_at(pos, d_model: int):
+    """One sinusoidal embedding row for a (traced) scalar position."""
+    dim = jnp.arange(d_model // 2, dtype=jnp.float32)
+    ang = pos.astype(jnp.float32) if hasattr(pos, "astype") \
+        else jnp.float32(pos)
+    ang = ang / (1e4 ** (dim / (d_model // 2)))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)

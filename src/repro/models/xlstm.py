@@ -1,0 +1,292 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, inherently recurrent), arXiv:2405.04517.
+
+mLSTM training uses the stabilized chunkwise form (TFLA-style): within a
+chunk the gated outer-product recurrence is evaluated as a masked
+attention-like quadratic; across chunks the (dk, dv) matrix memory, the
+normalizer and the log-space stabilizer are carried by ``lax.scan``.
+Decode is the O(1) recurrent update.  sLSTM has true recurrent weights
+(h_{t-1} feeds the gates), so it runs as a per-step scan — that
+sequential spine is the architecture's design, not an implementation
+shortcut; the 7:1 mLSTM:sLSTM interleave keeps it off the critical path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_linear, init_norm, linear, norm
+
+_NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+def init_mlstm(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    d_in = cfg.xlstm_d_inner
+    h = cfg.n_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "up": init_linear(ks[0], d, 2 * d_in, dtype=dtype),
+        "conv_w": jax.random.normal(ks[1], (cfg.xlstm_d_conv, d_in),
+                                    dtype) * 0.1,
+        "conv_b": jnp.zeros((d_in,), dtype),
+        # q/k/v are per-head block-diagonal (the mLSTM multihead design;
+        # dense d_in x d_in would triple the block's parameter count)
+        "wq": jax.random.normal(ks[2], (h, d_in // h, d_in // h),
+                                dtype) * (d_in // h) ** -0.5,
+        "wk": jax.random.normal(ks[3], (h, d_in // h, d_in // h),
+                                dtype) * (d_in // h) ** -0.5,
+        "wv": jax.random.normal(ks[4], (h, d_in // h, d_in // h),
+                                dtype) * (d_in // h) ** -0.5,
+        "w_if": init_linear(ks[5], d_in, 2 * h, dtype=dtype),
+        "skip": jnp.ones((d_in,), dtype) * 0.5,
+        "out_norm": init_norm(d_in, "rmsnorm", dtype),
+        "down": init_linear(ks[6], d_in, d, dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    w = w.astype(x.dtype)
+    b = b.astype(x.dtype)
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(k))
+    return y + b[None, None, :], (xp[:, -(k - 1):, :] if k > 1 else None)
+
+
+def _mlstm_qkvif(p, u, cfg, conv_state=None):
+    b, s, _ = u.shape
+    h = cfg.n_heads
+    d_in = cfg.xlstm_d_inner
+    dh = d_in // h
+    up = linear(p["up"], u)
+    x_m, z = up[..., :d_in], up[..., d_in:]
+    x_c, conv_state = _causal_conv(x_m, p["conv_w"], p["conv_b"], conv_state)
+    x_c = jax.nn.silu(x_c)
+    def headproj(w, t):
+        return jnp.einsum("bshd,hde->bshe",
+                          t.reshape(b, s, h, dh), w.astype(t.dtype))
+
+    q = headproj(p["wq"], x_c)
+    k = headproj(p["wk"], x_c) * (dh ** -0.5)
+    v = headproj(p["wv"], x_m)
+    i_f = linear(p["w_if"], x_m).astype(jnp.float32)
+    i_pre, f_pre = i_f[..., :h], i_f[..., h:]              # (B,S,H)
+    f_log = jax.nn.log_sigmoid(f_pre)
+    return q, k, v, i_pre, f_log, x_c, z, conv_state
+
+
+def mlstm_chunked(p, u, cfg, *, state=None, return_state: bool = False,
+                  conv_state=None):
+    """u: (B, S, d) -> (B, S, d)."""
+    b, s, _ = u.shape
+    h = cfg.n_heads
+    d_in = cfg.xlstm_d_inner
+    dh = d_in // h
+    chunk = min(cfg.xlstm_chunk, s)
+    if s % chunk:
+        chunk = s
+    nc = s // chunk
+
+    q, k, v, i_pre, f_log, x_c, z, conv_state = _mlstm_qkvif(
+        p, u, cfg, conv_state)
+
+    if state is None:
+        state = (jnp.zeros((b, h, dh, dh), jnp.float32),   # C (dk, dv)
+                 jnp.zeros((b, h, dh), jnp.float32),       # n
+                 jnp.full((b, h), _NEG, jnp.float32))      # m
+
+    def chunked(t, shape):
+        return jnp.moveaxis(
+            t.reshape((b, nc, chunk) + shape), 1, 0).astype(jnp.float32)
+
+    qc, kc, vc = (chunked(t, (h, dh)) for t in (q, k, v))
+    ic = chunked(i_pre, (h,))
+    fc = chunked(f_log, (h,))
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def body(carry, inp):
+        C, n, m = carry
+        qk_, kk_, vk_, ik_, fk_ = inp                      # (B,L,H,*)
+        F = jnp.cumsum(fk_, axis=1)                        # (B,L,H)
+        # intra logits D[t,s] = F_t - F_s + i_s  (s <= t)
+        D = F[:, :, None, :] - F[:, None, :, :] + ik_[:, None, :, :]
+        D = jnp.where(tri[None, :, :, None], D, _NEG)
+        A = F + m[:, None, :]                              # inter decay logit
+        m_loc = jnp.maximum(D.max(axis=2), A)              # (B,L,H)
+        d_w = jnp.exp(D - m_loc[:, :, None, :])            # (B,L,L,H)
+        a_w = jnp.exp(A - m_loc)                           # (B,L,H)
+        qk = jnp.einsum("blhd,bshd->blsh", qk_, kk_)       # (B,L,L,H)
+        num = jnp.einsum("blsh,blsh,bshd->blhd", qk, d_w, vk_) \
+            + a_w[..., None] * jnp.einsum("blhd,bhde->blhe", qk_, C)
+        den = jnp.einsum("blsh,blsh->blh", qk, d_w) \
+            + a_w * jnp.einsum("blhd,bhd->blh", qk_, n)
+        hs = num / jnp.maximum(jnp.abs(den),
+                               jnp.exp(-m_loc))[..., None]
+        # end-of-chunk state
+        Fl = F[:, -1, :]                                   # (B,H)
+        w_s = Fl[:, None, :] - F + ik_                     # (B,L,H)
+        m_new = jnp.maximum(Fl + m, w_s.max(axis=1))
+        s_w = jnp.exp(w_s - m_new[:, None, :])
+        C_new = C * jnp.exp(Fl + m - m_new)[:, :, None, None] \
+            + jnp.einsum("blh,blhd,blhe->bhde", s_w, kk_, vk_)
+        n_new = n * jnp.exp(Fl + m - m_new)[:, :, None] \
+            + jnp.einsum("blh,blhd->bhd", s_w, kk_)
+        return (C_new, n_new, m_new), hs
+
+    (C, n, m), hs = jax.lax.scan(body, state, (qc, kc, vc, ic, fc))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(b, s, d_in).astype(u.dtype)
+    hs = hs + p["skip"].astype(u.dtype) * x_c
+    hs = norm(p["out_norm"], hs, "rmsnorm") * jax.nn.silu(z)
+    out = linear(p["down"], hs)
+    if return_state:
+        return out, (C, n, m), conv_state
+    return out
+
+
+def mlstm_decode(p, u, cfg, state, conv_state):
+    """One-token update.  state = (C, n, m)."""
+    b = u.shape[0]
+    h = cfg.n_heads
+    d_in = cfg.xlstm_d_inner
+    dh = d_in // h
+    C, n, m = state
+    q, k, v, i_pre, f_log, x_c, z, conv_state = _mlstm_qkvif(
+        p, u, cfg, conv_state)
+    qt = q[:, 0].astype(jnp.float32)                       # (B,H,dh)
+    kt = k[:, 0].astype(jnp.float32)
+    vt = v[:, 0].astype(jnp.float32)
+    it = i_pre[:, 0]                                       # (B,H)
+    ft = f_log[:, 0]
+    m_new = jnp.maximum(ft + m, it)
+    f_w = jnp.exp(ft + m - m_new)
+    i_w = jnp.exp(it - m_new)
+    C = C * f_w[..., None, None] + i_w[..., None, None] \
+        * kt[..., :, None] * vt[..., None, :]
+    n = n * f_w[..., None] + i_w[..., None] * kt
+    num = jnp.einsum("bhd,bhde->bhe", qt, C)
+    den = jnp.einsum("bhd,bhd->bh", qt, n)
+    hs = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    hs = hs.reshape(b, 1, d_in).astype(u.dtype)
+    hs = hs + p["skip"].astype(u.dtype) * x_c
+    hs = norm(p["out_norm"], hs, "rmsnorm") * jax.nn.silu(z)
+    return linear(p["down"], hs), (C, n, m_new), conv_state
+
+
+def mlstm_recurrent_ref(p, u, cfg):
+    b, s, _ = u.shape
+    h, d_in = cfg.n_heads, cfg.xlstm_d_inner
+    dh = d_in // h
+    state = (jnp.zeros((b, h, dh, dh), jnp.float32),
+             jnp.zeros((b, h, dh), jnp.float32),
+             jnp.full((b, h), _NEG, jnp.float32))
+    conv_state = jnp.zeros((b, cfg.xlstm_d_conv - 1, d_in), u.dtype)
+    outs = []
+    for t in range(s):
+        o, state, conv_state = mlstm_decode(p, u[:, t:t + 1], cfg, state,
+                                            conv_state)
+        outs.append(o)
+    return jnp.concatenate(outs, 1)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+def init_slstm(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 4)
+    d_up = int(d * 4 / 3 / 64) * 64 * 2 or 2 * d
+    return {
+        "w_in": init_linear(ks[0], d, 4 * d, dtype=dtype),   # z i f o
+        # block-diagonal recurrence: per head (dh -> 4*dh)
+        "r": jax.random.normal(ks[1], (h, dh, 4 * dh), dtype) * (dh ** -0.5),
+        "out_norm": init_norm(d, "rmsnorm", dtype),
+        "up": init_linear(ks[2], d, d_up, dtype=dtype),
+        "down": init_linear(ks[3], d_up // 2, d, dtype=dtype),
+    }
+
+
+def _slstm_recurrence(r, x_in, state):
+    """Per-step scan over (B, S, 4d) pre-activations.  Separated so it can
+    run under shard_map: the recurrent-weight gradient then psums ONCE at
+    the shard_map boundary instead of all-reducing every timestep inside
+    the transposed scan (S x n_layers all-reduces of the (H, dh, 4dh)
+    partial — 384 GiB/step on xlstm train_4k; EXPERIMENTS.md §Perf)."""
+    b = x_in.shape[0]
+    h, dh = r.shape[0], r.shape[1]
+
+    def step(carry, xt):
+        c, n, m, hp = carry
+        rec = jnp.einsum("bhd,hdk->bhk", hp, r)            # (B,H,4dh)
+        pre = xt.astype(jnp.float32).reshape(b, h, 4 * dh) + rec
+        zt = jnp.tanh(pre[..., 0 * dh:1 * dh])
+        it = pre[..., 1 * dh:2 * dh]
+        ft = jax.nn.log_sigmoid(pre[..., 2 * dh:3 * dh])
+        ot = jax.nn.sigmoid(pre[..., 3 * dh:4 * dh])
+        m_new = jnp.maximum(ft + m, it)
+        c = c * jnp.exp(ft + m - m_new) + jnp.exp(it - m_new) * zt
+        n = n * jnp.exp(ft + m - m_new) + jnp.exp(it - m_new)
+        ht = ot * c / jnp.maximum(n, 1.0)
+        return (c, n, m_new, ht), ht
+
+    return jax.lax.scan(step, state, jnp.moveaxis(x_in, 1, 0))
+
+
+def _dp_total(ctx):
+    import numpy as np
+    return int(np.prod([ctx.mesh.shape[a] for a in ctx.batch_axes_full]))
+
+
+def slstm_scan(p, u, cfg, *, state=None, return_state: bool = False):
+    """u: (B, S, d) -> (B, S, d).  Per-step scan (true recurrence)."""
+    from .. import dist
+    b, s, d = u.shape
+    h = cfg.n_heads
+    dh = d // h
+    # stream the pre-activations in the compute dtype (the scan reads
+    # them once per step; f32 doubled the dominant memory term), gate
+    # math upcasts to f32 inside the step
+    x_in = linear(p["w_in"], u)                            # (B,S,4d)
+    if state is None:
+        state = (jnp.zeros((b, h, dh), jnp.float32),       # c
+                 jnp.zeros((b, h, dh), jnp.float32),       # n
+                 jnp.full((b, h, dh), _NEG, jnp.float32),  # m
+                 jnp.zeros((b, h, dh), jnp.float32))       # h_prev
+
+    r = p["r"].astype(jnp.float32)
+
+    ctx = dist.current()
+    if ctx is not None and b % _dp_total(ctx) == 0:
+        from jax.sharding import PartitionSpec as P
+        dp = ctx.batch_axes_full
+        bspec = P(dp, None, None)
+        st_spec = (bspec,) * 4
+        state_f, hs = jax.shard_map(
+            _slstm_recurrence, mesh=ctx.mesh,
+            in_specs=(P(), bspec, st_spec),
+            out_specs=(st_spec, P(None, dp, None, None)),
+            check_vma=False)(r, x_in, state)
+    else:
+        state_f, hs = _slstm_recurrence(r, x_in, state)
+    hs = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(u.dtype)
+    hs = norm(p["out_norm"], hs, "rmsnorm")
+    # gated post-MLP (proj factor ~4/3)
+    up = linear(p["up"], hs)
+    g, v = jnp.split(up, 2, axis=-1)
+    out = linear(p["down"], jax.nn.gelu(g, approximate=True) * v)
+    if return_state:
+        return out, state_f
+    return out
+
+
+def slstm_decode(p, u, cfg, state):
+    out, state = slstm_scan(p, u, cfg, state=state, return_state=True)
+    return out, state

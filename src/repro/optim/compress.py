@@ -1,0 +1,53 @@
+"""Gradient compression: per-tensor int8 quantization with error feedback.
+
+For cross-pod gradient reduction the ICI/DCN link is the scarce resource
+(the paper's memory-controller contention, one level up).  int8 + error
+feedback cuts the all-reduce payload 4x vs f32 (2x vs bf16) while the
+residual buffer keeps the update unbiased over time.  The trainer applies
+this on the pod axis only — intra-pod reductions stay full precision.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ErrorFeedbackState(NamedTuple):
+    residual: Any
+
+
+def ef_init(grads) -> ErrorFeedbackState:
+    return ErrorFeedbackState(jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads))
+
+
+def compress_int8(g):
+    """g (f32/bf16) -> (int8 values, f32 scale).  Symmetric per-tensor."""
+    g32 = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q, scale, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compress_with_feedback(grads, ef: ErrorFeedbackState):
+    """Returns (quantized tree of (q, scale), new error-feedback state).
+    The caller all-reduces the int8 payloads (summing dequantized values),
+    and the residual = g - dequant(q) re-enters the next step's gradients.
+    """
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        q, scale = compress_int8(corrected)
+        residual = corrected - decompress_int8(q, scale)
+        return (q, scale), residual
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = treedef.flatten_up_to(ef.residual)
+    qs, rs = zip(*(one(g, r) for g, r in zip(flat_g, flat_r)))
+    return treedef.unflatten(list(qs)), \
+        ErrorFeedbackState(treedef.unflatten(list(rs)))

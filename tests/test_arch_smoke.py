@@ -1,0 +1,116 @@
+"""Per-architecture smoke tests: reduced configs of each family run one
+forward/train step (and a prefill+decode consistency check) on CPU,
+asserting output shapes and finiteness."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import api
+
+SEQ = 32
+BATCH = 2
+
+
+def _reduced(arch_id):
+    cfg = get_config(arch_id).reduced()
+    return cfg
+
+
+def _batch(cfg, seq=SEQ, batch=BATCH, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    out = {"tokens": jax.random.randint(ks[0], (batch, seq), 0,
+                                        cfg.vocab_size)}
+    if cfg.vision_seq:
+        out["vision_embeds"] = jax.random.normal(
+            ks[1], (batch, cfg.vision_seq, cfg.d_model),
+            jnp.dtype(cfg.compute_dtype)) * 0.02
+    if cfg.family == "audio":
+        out["enc_frames"] = jax.random.normal(
+            ks[2], (batch, cfg.encoder_seq, cfg.d_model),
+            jnp.dtype(cfg.compute_dtype)) * 0.02
+    return out
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_forward_loss(arch_id):
+    cfg = _reduced(arch_id)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    n = api.count_params(params)
+    assert n > 0
+    batch = _batch(cfg)
+    loss = api.loss_fn(params, cfg, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch_id}: loss not finite"
+    # a plausible CE for random init: ~log(padded_vocab) +- slack
+    assert 1.0 < float(loss) < 3 * np.log(cfg.padded_vocab)
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_train_step_grads(arch_id):
+    cfg = _reduced(arch_id)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg)
+    loss, grads = jax.value_and_grad(
+        lambda p: api.loss_fn(p, cfg, batch))(params)
+    assert bool(jnp.isfinite(loss))
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                         for g in jax.tree_util.tree_leaves(grads)))
+    assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0.0, arch_id
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_prefill_decode_consistency(arch_id):
+    """Teacher-forcing: decode step at position S must reproduce the
+    full-forward logits for the same next token."""
+    cfg = _reduced(arch_id)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg)
+    tokens = batch["tokens"]
+
+    # full forward over S+1 tokens: logits at position S-1 predict token S
+    nxt = jax.random.randint(jax.random.PRNGKey(9), (BATCH, 1), 0,
+                             cfg.vocab_size)
+    full_batch = dict(batch, tokens=jnp.concatenate([tokens, nxt], 1))
+    logits_full = api.forward_logits(params, cfg, full_batch)
+
+    # prefill on S tokens, then decode token S
+    _, caches = api.prefill_step(params, cfg, batch)
+    caches = api.pad_caches(caches, SEQ + 8)
+    logits_dec, _ = api.decode_step(params, cfg, nxt, caches,
+                                    jnp.int32(SEQ))
+    want = np.asarray(logits_full[:, SEQ], np.float32)
+    got = np.asarray(logits_dec[:, 0], np.float32)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3,
+                               err_msg=arch_id)
+
+
+def test_registry_complete():
+    assert len(ARCH_IDS) == 10
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        assert cfg.name == a
+        # exact published dims spot-checks
+    assert get_config("qwen2-vl-72b").d_model == 8192
+    assert get_config("command-r-35b").vocab_size == 256000
+    assert get_config("deepseek-v2-lite-16b").kv_lora_rank == 512
+    assert get_config("zamba2-1.2b").ssm_state == 64
+    assert get_config("nemotron-4-15b").act == "relu2"
+
+
+def test_input_specs_cells():
+    from repro.configs import applicable_shapes, input_specs
+    total = 0
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        shapes = applicable_shapes(cfg)
+        if cfg.sub_quadratic:
+            assert "long_500k" in shapes
+        else:
+            assert "long_500k" not in shapes
+        for s in shapes:
+            specs = input_specs(cfg, s)
+            assert specs
+            total += 1
+    assert total == 32  # 10 archs x 3 + 2 long_500k

@@ -1,0 +1,288 @@
+"""Core runtime behaviour: dependence analysis, MPB protocol, executors.
+
+The central property is *serial elision*: for any task program, executing
+through the dynamic host runtime or the staged wavefront runtime produces
+bit-identical results to running the tasks sequentially in program order.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import TaskRuntime, In, InOut, Out
+from repro.core.blocks import BlockArray
+from repro.core.graph import DescriptorPool, TaskState
+from repro.core.mpb import MPBQueue, SlotState
+
+
+# ---------------------------------------------------------------------------
+# deterministic, order-sensitive task functions
+def _acc(prev, x):
+    return prev * jnp.float32(0.5) + x
+
+
+def _combine(a, b):
+    return a - jnp.float32(2.0) * b
+
+
+def _scale(a):
+    return a * jnp.float32(1.25) + jnp.float32(1.0)
+
+
+def _fill7(_):
+    return jnp.full_like(_, 7.0)
+
+
+# ---------------------------------------------------------------------------
+# unit: blocks / regions
+class TestBlocks:
+    def test_roundtrip(self):
+        a = np.arange(64, dtype=np.float32).reshape(8, 8)
+        ba = BlockArray.from_array(a, (4, 4))
+        assert ba.grid == (2, 2)
+        np.testing.assert_array_equal(np.asarray(ba.gather()), a)
+
+    def test_region_materialize_store(self):
+        a = np.arange(64, dtype=np.float32).reshape(8, 8)
+        ba = BlockArray.from_array(a, (4, 4))
+        reg = ba[0:2, 1]                      # a 2x1 block column
+        assert reg.shape == (8, 4)
+        np.testing.assert_array_equal(np.asarray(reg.materialize()),
+                                      a[:, 4:8])
+        reg.store(jnp.zeros((8, 4), jnp.float32))
+        assert np.asarray(ba.gather())[:, 4:8].sum() == 0
+
+    def test_bad_block_shape(self):
+        with pytest.raises(ValueError):
+            BlockArray((10, 10), (4, 4))
+
+    def test_footprint_ids_unique_per_array(self):
+        x = BlockArray((8, 8), (4, 4))
+        y = BlockArray((8, 8), (4, 4))
+        assert set(x.whole.block_ids).isdisjoint(set(y.whole.block_ids))
+
+
+# ---------------------------------------------------------------------------
+# unit: the MPB SPSC protocol (§3.4-3.5)
+class TestMPB:
+    def _td(self, pool, i=0):
+        return pool.acquire(_scale, (), name=f"t{i}")
+
+    def test_fill_reject_complete_reuse(self):
+        pool = DescriptorPool(64)
+        q = MPBQueue(0, n_slots=2)
+        t0, t1, t2 = (self._td(pool, i) for i in range(3))
+        assert q.try_put(t0) == (True, None)
+        assert q.try_put(t1) == (True, None)
+        ok, col = q.try_put(t2)              # ring full -> reject
+        assert not ok and col is None
+        assert q.full_rejections == 1
+        # worker consumes t0, marks completed; master's next put reclaims it
+        w = q.next_ready(timeout=0)
+        assert w is t0
+        q.mark_completed(t0)
+        ok, col = q.try_put(t2)
+        assert ok and col is t0
+
+    def test_collect_completed(self):
+        pool = DescriptorPool(64)
+        q = MPBQueue(0, n_slots=4)
+        tds = [self._td(pool, i) for i in range(3)]
+        for td in tds:
+            q.try_put(td)
+        for td in tds:
+            assert q.next_ready(timeout=0) is td
+            q.mark_completed(td)
+        assert q.collect_completed() == tds
+        assert q.occupancy() == 0
+
+
+# ---------------------------------------------------------------------------
+# unit: dependence orderings
+class TestDependences:
+    def _rt(self):
+        return TaskRuntime(executor="staged")
+
+    def _edges(self, rt):
+        edges = []
+        orig = rt.analyzer.analyze
+
+        def wrapped(td):
+            deps = orig(td)
+            edges.extend((d.tid, td.tid) for d in deps)
+            return deps
+
+        rt.analyzer.analyze = wrapped
+        return edges
+
+    def test_raw(self):
+        rt = self._rt()
+        edges = self._edges(rt)
+        A = rt.zeros((4, 4), (4, 4))
+        t0 = rt.spawn(_fill7, InOut(A[0, 0]))
+        t1 = rt.spawn(_scale, In(A[0, 0]), Out(A[0, 0]))
+        assert (t0.tid, t1.tid) in edges
+        rt.barrier()
+        np.testing.assert_allclose(np.asarray(A.gather()), 7 * 1.25 + 1)
+
+    def test_war_and_waw(self):
+        rt = self._rt()
+        edges = self._edges(rt)
+        A = rt.zeros((4, 4), (4, 4))
+        B = rt.zeros((4, 4), (4, 4))
+        r = rt.spawn(_scale, In(A[0, 0]), Out(B[0, 0]))   # reader of A
+        w1 = rt.spawn(_fill7, InOut(A[0, 0]))              # WAR on r, WAW later
+        w2 = rt.spawn(_fill7, InOut(A[0, 0]))
+        assert (r.tid, w1.tid) in edges                    # WAR
+        assert (w1.tid, w2.tid) in edges                   # WAW
+        rt.barrier()
+
+    def test_disjoint_footprints_no_deps(self):
+        rt = self._rt()
+        edges = self._edges(rt)
+        A = rt.zeros((8, 8), (4, 4))
+        rt.spawn(_fill7, InOut(A[0, 0]))
+        rt.spawn(_fill7, InOut(A[1, 1]))
+        assert edges == []
+        rt.barrier()
+
+    def test_multiblock_region_overlap(self):
+        rt = self._rt()
+        edges = self._edges(rt)
+        A = rt.zeros((8, 8), (4, 4))
+        t0 = rt.spawn(_fill7, InOut(A[0, 0:2]))   # row of blocks
+        t1 = rt.spawn(_fill7, InOut(A[0:2, 1]))   # column of blocks, overlaps
+        assert (t0.tid, t1.tid) in edges
+        rt.barrier()
+
+
+# ---------------------------------------------------------------------------
+# descriptor pool exhaustion (§3.3): master blocks until recycling
+@pytest.mark.parametrize("kind", ["host", "staged"])
+def test_pool_exhaustion_recycles(kind):
+    rt = TaskRuntime(executor=kind, n_workers=2, pool_capacity=4,
+                     mpb_slots=2)
+    A = rt.zeros((4, 4), (4, 4))
+    for _ in range(20):
+        rt.spawn(_scale, In(A[0, 0]), Out(A[0, 0]))
+    rt.barrier()
+    got = np.asarray(A.gather())
+    expect = np.zeros((4, 4), np.float32)
+    for _ in range(20):
+        expect = expect * 0.5 * 0 + expect * 1.25 + 1  # _scale repeatedly
+    np.testing.assert_allclose(got, expect, rtol=1e-6)
+    rt.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# property: serial elision equivalence on random task programs
+def _random_program(rt, ops):
+    """Replay a generated op list onto a runtime; return its arrays."""
+    A = rt.zeros((12, 12), (4, 4), name="A")
+    B = rt.full((12, 12), (4, 4), 1.0, name="B")
+    arrays = [A, B]
+    for op in ops:
+        kind, src_a, si, sj, dst_a, di, dj = op
+        src, dst = arrays[src_a], arrays[dst_a]
+        if kind == 0:
+            rt.spawn(_acc, InOut(dst[di, dj]), In(src[si, sj]))
+        elif kind == 1:
+            rt.spawn(_combine, In(src[si, sj]), In(dst[di, dj]),
+                     Out(dst[di, dj]))
+        elif kind == 2:
+            rt.spawn(_scale, In(src[si, sj]), Out(dst[di, dj]))
+        else:
+            rt.spawn(_fill7, InOut(dst[di, dj]))
+    rt.barrier()
+    return [np.asarray(a.gather()) for a in arrays]
+
+
+_op = st.tuples(st.integers(0, 3), st.integers(0, 1), st.integers(0, 2),
+                st.integers(0, 2), st.integers(0, 1), st.integers(0, 2),
+                st.integers(0, 2))
+
+
+@settings(max_examples=30, deadline=None)
+@given(ops=st.lists(_op, min_size=1, max_size=40))
+def test_serial_elision_staged(ops):
+    ref = _random_program(TaskRuntime(executor="sequential"), ops)
+    got = _random_program(TaskRuntime(executor="staged"), ops)
+    for r, g in zip(ref, got):
+        np.testing.assert_array_equal(r, g)
+
+
+@settings(max_examples=12, deadline=None)
+@given(ops=st.lists(_op, min_size=1, max_size=25))
+def test_serial_elision_host(ops):
+    ref = _random_program(TaskRuntime(executor="sequential"), ops)
+    rt = TaskRuntime(executor="host", n_workers=3, mpb_slots=2)
+    try:
+        got = _random_program(rt, ops)
+    finally:
+        rt.shutdown()
+    for r, g in zip(ref, got):
+        np.testing.assert_array_equal(r, g)
+
+
+# ---------------------------------------------------------------------------
+# property: execution order respects every discovered dependence edge
+@settings(max_examples=15, deadline=None)
+@given(ops=st.lists(_op, min_size=2, max_size=40))
+def test_execution_respects_dependences(ops):
+    rt = TaskRuntime(executor="staged")
+    edges = []
+    orig = rt.analyzer.analyze
+    def wrapped(td):
+        deps = orig(td)
+        edges.extend((d, td) for d in deps)
+        return deps
+    rt.analyzer.analyze = wrapped
+    _random_program(rt, ops)
+    for d, t in edges:
+        assert d.exec_order is not None and t.exec_order is not None
+        assert d.exec_order < t.exec_order, (d, t)
+
+
+# ---------------------------------------------------------------------------
+# scheduling policies all produce correct results
+@pytest.mark.parametrize("policy", ["round_robin", "locality", "random"])
+def test_policies(policy):
+    rng = np.random.default_rng(1)
+    a = rng.standard_normal((64, 64), dtype=np.float32)
+    b = rng.standard_normal((64, 64), dtype=np.float32)
+
+    def gemm(c, x, y):
+        return c + x @ y
+
+    rt = TaskRuntime(executor="host", n_workers=3, mpb_slots=2,
+                     policy=policy)
+    A = rt.from_array(a, (16, 16))
+    B = rt.from_array(b, (16, 16))
+    C = rt.zeros((64, 64), (16, 16))
+    g = 4
+    for i in range(g):
+        for j in range(g):
+            for k in range(g):
+                rt.spawn(gemm, InOut(C[i, j]), In(A[i, k]), In(B[k, j]))
+    rt.barrier()
+    rt.shutdown()
+    np.testing.assert_allclose(np.asarray(C.gather()), a @ b,
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# placement
+def test_placement_striped_balanced():
+    from repro.core.placement import home_histogram
+    rt = TaskRuntime(executor="sequential", placement="striped",
+                     n_controllers=4)
+    A = rt.zeros((32, 32), (4, 4))     # 64 blocks
+    hist = home_histogram(A, 4)
+    assert hist == [16, 16, 16, 16]
+
+
+def test_placement_single_contended():
+    from repro.core.placement import home_histogram
+    rt = TaskRuntime(executor="sequential", placement="single")
+    A = rt.zeros((32, 32), (4, 4))
+    assert home_histogram(A, 4) == [64, 0, 0, 0]

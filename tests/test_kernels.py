@@ -1,0 +1,219 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles,
+swept over shapes and dtypes; hypothesis properties for the combiners."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.black_scholes import ops as bs_ops, ref as bs_ref
+from repro.kernels.cholesky import ops as chol_ops, ref as chol_ref
+from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
+from repro.kernels.flash_decode import ops as fd_ops, ref as fd_ref
+from repro.kernels.jacobi import ops as jac_ops, ref as jac_ref
+from repro.kernels.matmul import ops as mm_ops, ref as mm_ref
+
+_rng = np.random.default_rng(42)
+
+
+def _randn(*shape, dtype=np.float32):
+    return jnp.asarray(_rng.standard_normal(shape).astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+class TestBlackScholes:
+    @pytest.mark.parametrize("n", [512, 2048, 1000, 129])
+    def test_vs_ref(self, n):
+        spot = jnp.asarray(_rng.uniform(10, 200, n).astype(np.float32))
+        strike = jnp.asarray(_rng.uniform(10, 200, n).astype(np.float32))
+        t = jnp.asarray(_rng.uniform(0.1, 2.0, n).astype(np.float32))
+        rate = jnp.full((n,), 0.03, jnp.float32)
+        vol = jnp.asarray(_rng.uniform(0.1, 0.6, n).astype(np.float32))
+        c_ref, p_ref = bs_ref.black_scholes(spot, strike, t, rate, vol)
+        c, p = bs_ops.black_scholes(spot, strike, t, rate, vol,
+                                    use_pallas=True, interpret=True,
+                                    block_rows=4)
+        np.testing.assert_allclose(np.asarray(c), np.asarray(c_ref),
+                                   rtol=1e-5, atol=1e-3)
+        np.testing.assert_allclose(np.asarray(p), np.asarray(p_ref),
+                                   rtol=1e-5, atol=1e-3)
+
+    def test_put_call_parity(self):
+        n = 256
+        spot = jnp.asarray(_rng.uniform(50, 150, n).astype(np.float32))
+        strike = jnp.full((n,), 100.0, jnp.float32)
+        t = jnp.full((n,), 1.0, jnp.float32)
+        rate = jnp.full((n,), 0.05, jnp.float32)
+        vol = jnp.full((n,), 0.3, jnp.float32)
+        c, p = bs_ops.black_scholes(spot, strike, t, rate, vol,
+                                    use_pallas=True, interpret=True)
+        parity = np.asarray(c - p - (spot - strike * jnp.exp(-rate * t)))
+        np.testing.assert_allclose(parity, 0.0, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+class TestMatmul:
+    @pytest.mark.parametrize("m,n,k", [(128, 128, 128), (256, 128, 384),
+                                       (128, 256, 512)])
+    @pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+    def test_vs_ref(self, m, n, k, dtype):
+        a, b, c = _randn(m, k), _randn(k, n), _randn(m, n)
+        a, b, c = (x.astype(dtype) for x in (a, b, c))
+        got = mm_ops.matmul(a, b, c, use_pallas=True, interpret=True)
+        want = mm_ref.matmul(a, b, c)
+        tol = 1e-4 if dtype == np.float32 else 5e-2
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=tol, atol=tol)
+
+    @pytest.mark.parametrize("m,n,k,bk", [(128, 128, 256, 128),
+                                          (64, 128, 128, 64)])
+    def test_tile_update(self, m, n, k, bk):
+        c, a, b = _randn(m, n), _randn(m, k), _randn(n, k)
+        got = mm_ops.tile_update(c, a, b, use_pallas=True, interpret=True,
+                                 bk=bk)
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(mm_ref.tile_update(c, a, b)),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+class TestJacobi:
+    @pytest.mark.parametrize("h,w,br", [(256, 128, 64), (128, 256, 128),
+                                        (64, 128, 64), (512, 128, 128)])
+    def test_vs_ref(self, h, w, br):
+        x = _randn(h, w)
+        got = jac_ops.jacobi_step(x, use_pallas=True, interpret=True,
+                                  block_rows=br)
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(jac_ref.jacobi_step(x)),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_max_principle_and_diffusion(self):
+        # Laplace max principle: interior stays within boundary extremes;
+        # heat diffuses inward from the hot boundary row
+        x = jnp.zeros((32, 128), jnp.float32).at[0, :].set(1.0)
+        y = jac_ops.jacobi(x, iters=200)
+        interior = np.asarray(y)[1:-1, 1:-1]
+        assert interior.min() >= 0.0 and interior.max() <= 1.0
+        assert interior.mean() > 0.01            # heat actually moved
+        assert not np.isnan(np.asarray(y)).any()
+
+
+# ---------------------------------------------------------------------------
+class TestCholesky:
+    @pytest.mark.parametrize("n,tile", [(256, 64), (384, 128)])
+    def test_blocked_vs_lapack(self, n, tile):
+        a = np.asarray(_randn(n, n), np.float64)
+        spd = jnp.asarray(a @ a.T + n * np.eye(n), jnp.float32)
+        got = chol_ref.cholesky_blocked(spd, tile)
+        want = jnp.linalg.cholesky(spd)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_tile_ops(self):
+        a = np.asarray(_randn(128, 128), np.float64)
+        spd = jnp.asarray(a @ a.T + 128 * np.eye(128), jnp.float32)
+        l = chol_ops.potrf(spd)
+        np.testing.assert_allclose(np.asarray(l @ l.T), np.asarray(spd),
+                                   rtol=1e-3, atol=1e-3)
+        b = _randn(128, 128)
+        x = chol_ops.trsm(l, b)
+        np.testing.assert_allclose(np.asarray(x @ l.T), np.asarray(b),
+                                   rtol=1e-3, atol=1e-3)
+        c = _randn(128, 128)
+        got = chol_ops.update(c, b, b, use_pallas=True, interpret=True)
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(chol_ref.update(c, b, b)),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+class TestFlashAttention:
+    @pytest.mark.parametrize("causal", [True, False])
+    @pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2)])
+    @pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+    def test_vs_ref(self, causal, hq, hkv, dtype):
+        B, S, D = 2, 128, 64
+        q = _randn(B, hq, S, D).astype(dtype)
+        k = _randn(B, hkv, S, D).astype(dtype)
+        v = _randn(B, hkv, S, D).astype(dtype)
+        want = np.asarray(fa_ref.mha(q, k, v, causal=causal), np.float32)
+        tol = 2e-5 if dtype == np.float32 else 2e-2
+        for impl in ("chunked", "pallas"):
+            got = np.asarray(fa_ops.attention(
+                q, k, v, causal=causal, impl=impl, interpret=True,
+                q_chunk=64, k_chunk=64), np.float32)
+            np.testing.assert_allclose(got, want, rtol=tol, atol=tol,
+                                       err_msg=impl)
+
+    def test_prefill_continuation(self):
+        # Sq < Skv: new chunk attends to full prefix causally
+        B, H, D = 1, 2, 64
+        q = _randn(B, H, 32, D)
+        k = _randn(B, H, 128, D)
+        v = _randn(B, H, 128, D)
+        want = np.asarray(fa_ref.mha(q, k, v, causal=True))
+        for impl in ("chunked", "pallas"):
+            got = np.asarray(fa_ops.attention(q, k, v, causal=True,
+                                              impl=impl, interpret=True,
+                                              q_chunk=32, k_chunk=64))
+            np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(sq=st.sampled_from([64, 128]), skv=st.sampled_from([128, 256]),
+           d=st.sampled_from([32, 64, 128]))
+    def test_chunked_property(self, sq, skv, d):
+        q, k, v = _randn(1, 2, sq, d), _randn(1, 2, skv, d), _randn(1, 2, skv, d)
+        want = np.asarray(fa_ref.mha(q, k, v, causal=True))
+        got = np.asarray(fa_ops.attention(q, k, v, causal=True,
+                                          impl="chunked", q_chunk=32,
+                                          k_chunk=64))
+        np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+class TestFlashDecode:
+    @pytest.mark.parametrize("hq,hkv,s", [(8, 2, 512), (4, 4, 256),
+                                          (16, 8, 1024)])
+    def test_vs_ref(self, hq, hkv, s):
+        B, D = 2, 64
+        q = _randn(B, hq, D)
+        k, v = _randn(B, hkv, s, D), _randn(B, hkv, s, D)
+        want = np.asarray(fd_ref.decode_mha(q, k, v))
+        got = np.asarray(fd_ops.decode_attention(
+            q, k, v, use_pallas=True, interpret=True, bk=128))
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(n_shards=st.sampled_from([1, 2, 4, 8]))
+    def test_shard_combine_exact(self, n_shards):
+        """Property: LSE-combining partials over any seq split == full
+        attention (the correctness of SP decode)."""
+        B, Hq, Hkv, S, D = 1, 4, 2, 256, 32
+        q = _randn(B, Hq, D)
+        k, v = _randn(B, Hkv, S, D), _randn(B, Hkv, S, D)
+        want = np.asarray(fd_ref.decode_mha(q, k, v))
+        chunk = S // n_shards
+        outs, lses = [], []
+        for i in range(n_shards):
+            o, lse = fd_ops.decode_partial(q, k[:, :, i*chunk:(i+1)*chunk],
+                                           v[:, :, i*chunk:(i+1)*chunk])
+            outs.append(o)
+            lses.append(lse)
+        got = np.asarray(fd_ref.combine_partials(jnp.stack(outs),
+                                                 jnp.stack(lses)))
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_masked_padding_shard(self):
+        """A shard that is entirely padding must not perturb the combine."""
+        B, Hq, Hkv, S, D = 1, 4, 2, 128, 32
+        q = _randn(B, Hq, D)
+        k, v = _randn(B, Hkv, S, D), _randn(B, Hkv, S, D)
+        want = np.asarray(fd_ref.decode_mha(q, k, v))
+        o1, l1 = fd_ops.decode_partial(q, k, v)
+        mask = jnp.zeros((B, S), bool)
+        o2, l2 = fd_ops.decode_partial(q, k, v, mask=mask)
+        got = np.asarray(fd_ref.combine_partials(jnp.stack([o1, o2]),
+                                                 jnp.stack([l1, l2])))
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)

@@ -1,0 +1,142 @@
+"""Validation of the paper's findings via the DES + cost model, plus the
+master-placement and microbenchmark shapes (Figs 3-7, §4.1-§4.3)."""
+import numpy as np
+import pytest
+
+from repro.core.costmodel import (SCCParams, core_mc_hops,
+                                  master_core_choice, worker_order)
+from repro.core.sim import sequential_time, simulate
+
+import sys
+sys.path.insert(0, ".")
+from benchmarks.workloads import WORKLOADS  # noqa: E402
+
+
+@pytest.fixture(scope="module")
+def params():
+    return SCCParams()
+
+
+def _speedup(name, workers, placement="striped", p=None):
+    p = p or SCCParams()
+    gen = WORKLOADS[name]
+    seq = sequential_time(gen(placement), p)
+    r = simulate(gen(placement), workers, p)
+    return seq / r.total_s
+
+
+class TestCostModel:
+    def test_fig3_monotone_in_hops(self, params):
+        times = [params.mem_time_s(2**20, h) for h in range(10)]
+        assert all(b > a for a, b in zip(times, times[1:]))
+
+    def test_fig4_monotone_in_contention(self, params):
+        times = [params.mem_time_s(2**20, 9, concurrent=c)
+                 for c in range(1, 33)]
+        assert all(b > a for a, b in zip(times, times[1:]))
+        assert times[-1] / times[0] > 5     # strong effect, per the paper
+
+    def test_master_is_middle_core(self):
+        """§4.1: master at a middle core (16-19 on the SCC)."""
+        assert master_core_choice() in (16, 17, 18, 19, 28, 29, 30, 31)
+
+    def test_workers_sorted_by_distance(self):
+        m = master_core_choice()
+        order = worker_order(m)
+        d = [abs(core_mc_hops(c, 0) - core_mc_hops(m, 0)) for c in order]
+        from repro.core.costmodel import core_core_hops
+        hops = [core_core_hops(m, c) for c in order]
+        assert hops == sorted(hops)
+        assert len(order) == 47
+
+
+class TestScalability:
+    """Fig 5: the shape of each application's scaling curve."""
+
+    def test_blackscholes_near_linear(self):
+        s43 = _speedup("black_scholes", 43)
+        s16 = _speedup("black_scholes", 16)
+        assert 10 <= s43 <= 25               # paper: ~16x
+        assert s43 > s16                     # still climbing at 43
+
+    def test_matmul_scales_best(self):
+        s43 = _speedup("matmul", 43)
+        assert 25 <= s43 <= 40               # paper: ~33x
+        for other in ("black_scholes", "fft", "jacobi", "cholesky"):
+            assert s43 > _speedup(other, 43)
+
+    def test_fft_saturates_early(self):
+        s16 = _speedup("fft", 16)
+        s43 = _speedup("fft", 43)
+        assert s43 <= s16 * 1.25             # paper: flat past 16 workers
+
+    def test_jacobi_contention_limited(self):
+        s22 = _speedup("jacobi", 22)
+        s43 = _speedup("jacobi", 43)
+        assert s43 <= s22 * 1.4              # paper: max ~22 workers
+
+    def test_striping_beats_single_controller(self):
+        """§4.2: distributing data across all four MCs is the fix."""
+        for name in ("fft", "jacobi"):
+            assert _speedup(name, 43, "single") < \
+                0.7 * _speedup(name, 43, "striped")
+
+    def test_single_worker_overhead_bounded(self):
+        # parallel runtime on one worker pays flush + scheduling only
+        s1 = _speedup("matmul", 1)
+        assert 0.5 < s1 <= 1.05
+
+
+class TestBreakdowns:
+    """Figs 6-7: idle/app/flush decomposition and load balance."""
+
+    def test_contention_grows_app_time(self):
+        p = SCCParams()
+        gen = WORKLOADS["jacobi"]
+        r8 = simulate(gen("striped"), 8, p)
+        r43 = simulate(gen("striped"), 43, p)
+        # same total work, more expensive accesses (Fig 6d)
+        assert sum(r43.worker_busy_s) > 1.15 * sum(r8.worker_busy_s)
+
+    def test_flush_constant_per_task(self):
+        p = SCCParams()
+        gen = WORKLOADS["black_scholes"]
+        r8 = simulate(gen("striped"), 8, p)
+        r43 = simulate(gen("striped"), 43, p)
+        assert sum(r43.worker_flush_s) == pytest.approx(
+            sum(r8.worker_flush_s), rel=0.01)   # flushes = #tasks
+
+    def test_bs_mm_balanced_at_43(self):
+        p = SCCParams()
+        for name in ("black_scholes", "matmul"):
+            r = simulate(WORKLOADS[name]("striped"), 43, p)
+            busy = np.array(r.worker_busy_s)
+            assert busy.std() / busy.mean() < 0.2, name
+
+    def test_master_bottleneck_idles_workers(self):
+        """Fine granularity -> master cannot feed 43 workers (§4.3)."""
+        from benchmarks.workloads import matmul
+        p = SCCParams()
+        r = simulate(matmul("striped", tile=16), 43, p)
+        tot = (sum(r.worker_idle_s) + sum(r.worker_busy_s)
+               + sum(r.worker_flush_s))
+        assert sum(r.worker_idle_s) / tot > 0.4
+
+
+class TestWorkloads:
+    def test_sizes_match_paper(self):
+        assert len(WORKLOADS["black_scholes"]("striped")) == 2_000_000 // 512
+        assert len(WORKLOADS["matmul"]("striped")) == 16 ** 3
+        assert len(WORKLOADS["jacobi"]("striped")) == 8 * 8 * 16
+        g = 16
+        n_chol = g + g * (g - 1) // 2 + sum(
+            (g - k - 1) * (g - k) // 2 for k in range(g))
+        assert len(WORKLOADS["cholesky"]("striped")) == n_chol
+
+    def test_graphs_are_dags(self):
+        for name, gen in WORKLOADS.items():
+            tasks = gen("striped")
+            ids = {t.tid for t in tasks}
+            for t in tasks:
+                for d in t.deps:
+                    assert d in ids and d < t.tid, name

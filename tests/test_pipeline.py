@@ -1,0 +1,98 @@
+"""PP-as-task-graph: the 1F1B schedule derived by dependence analysis and
+its SPMD execution."""
+import subprocess
+import sys
+
+import pytest
+
+from repro.core.pipeline import PipeTask, derive_pipeline_schedule
+
+
+class TestScheduleDerivation:
+    def test_optimal_clock_count(self):
+        """Greedy backward-first scheduling of the BDDT DAG reaches the
+        textbook 1F1B bound: 2*M + 2*(S-1) clocks."""
+        for s, m in ((2, 4), (4, 8), (8, 8)):
+            table = derive_pipeline_schedule(s, m)
+            assert len(table) == 2 * m + 2 * (s - 1), (s, m)
+
+    def test_dependencies_respected(self):
+        table = derive_pipeline_schedule(4, 6)
+        seen = set()
+        for row in table:
+            fired = [t for t in row if t]
+            for t in fired:
+                if t.kind == "F" and t.stage > 0:
+                    assert PipeTask("F", t.stage - 1, t.micro) in seen
+                if t.kind == "B":
+                    assert PipeTask("F", t.stage, t.micro) in seen
+                    if t.stage < 3:
+                        assert PipeTask("B", t.stage + 1, t.micro) in seen
+            seen.update(fired)
+        # every task fired exactly once
+        assert len(seen) == 2 * 4 * 6
+
+    def test_weight_grad_serialized_per_stage(self):
+        """INOUT dW[s] must serialize each stage's backwards (at most one
+        B per stage per clock, in microbatch order)."""
+        table = derive_pipeline_schedule(3, 5)
+        last_micro = {s: -1 for s in range(3)}
+        for row in table:
+            for t in row:
+                if t and t.kind == "B":
+                    assert t.micro == last_micro[t.stage] + 1
+                    last_micro[t.stage] = t.micro
+
+    def test_steady_state_is_1f1b(self):
+        """In the steady state the last stage alternates F,B strictly."""
+        table = derive_pipeline_schedule(4, 8)
+        last = [row[3] for row in table if row[3] is not None]
+        kinds = "".join(t.kind for t in last)
+        assert "FB" * 8 == kinds  # last stage: perfect alternation
+
+
+@pytest.mark.slow
+def test_pipeline_execution_matches_sequential():
+    """Numerical check on 4 host devices (subprocess sets XLA_FLAGS)."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys
+sys.path.insert(0, "src")
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.pipeline import pipeline_step
+
+S, M, B, D = 4, 8, 2, 16
+mesh = jax.make_mesh((S,), ("stage",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+key = jax.random.PRNGKey(0)
+ws = jax.random.normal(key, (S, D, D)) * (D ** -0.5)
+xs = jax.random.normal(jax.random.PRNGKey(1), (M, B, D))
+
+def fwd(w, x):
+    return jnp.tanh(x @ w)
+
+def bwd(w, x, g):
+    # vjp of fwd wrt (x, w)
+    y, vjp = jax.vjp(lambda xx, ww: jnp.tanh(xx @ ww), x, w)
+    gx, gw = vjp(g)
+    return gx, gw
+
+dw = pipeline_step(fwd, bwd, ws, xs, mesh=mesh, stage_axis="stage",
+                   n_stages=S)
+
+# sequential reference: loss = sum(stageS-1(...stage0(x))) per microbatch
+def full(ws_, x):
+    h = x
+    for s in range(S):
+        h = jnp.tanh(h @ ws_[s])
+    return h.sum()
+
+ref = sum(jax.grad(full)(ws, xs[m]) for m in range(M))
+np.testing.assert_allclose(np.asarray(dw), np.asarray(ref),
+                           rtol=2e-4, atol=2e-4)
+print("PIPELINE-OK")
+"""
+    out = subprocess.run([sys.executable, "-c", code], cwd="/root/repo",
+                         capture_output=True, text=True, timeout=300)
+    assert "PIPELINE-OK" in out.stdout, out.stderr[-2000:]

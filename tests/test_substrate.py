@@ -1,0 +1,205 @@
+"""Training substrate: optimizer, schedule, compression, data pipeline,
+checkpointing (incl. elastic restore), sharding rules."""
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.ckpt import latest_step, restore_checkpoint, save_checkpoint
+from repro.data import SyntheticTokens
+from repro.optim import (adamw_init, adamw_update, clip_by_global_norm,
+                         compress_int8, cosine_schedule, decompress_int8)
+from repro.optim.compress import compress_with_feedback, ef_init
+
+
+# ---------------------------------------------------------------------------
+class TestAdamW:
+    def _params(self):
+        return {"w": jnp.ones((4, 4)), "b": jnp.zeros((4,)),
+                "nested": {"x": jnp.full((2, 3), 2.0)}}
+
+    def test_descends_quadratic(self):
+        params = {"w": jnp.full((8,), 5.0)}
+        state = adamw_init(params)
+        for step in range(200):
+            grads = {"w": 2 * params["w"]}          # d/dw w^2
+            params, state = adamw_update(grads, state, params, lr=5e-2,
+                                         weight_decay=0.0)
+        assert float(jnp.abs(params["w"]).max()) < 0.5
+
+    def test_state_structure_and_step(self):
+        p = self._params()
+        s = adamw_init(p)
+        g = jax.tree_util.tree_map(jnp.ones_like, p)
+        p2, s2 = adamw_update(g, s, p, lr=1e-3)
+        assert int(s2.step) == 1
+        assert jax.tree_util.tree_structure(p) == \
+            jax.tree_util.tree_structure(p2)
+
+    def test_clip(self):
+        g = {"a": jnp.full((10,), 10.0)}
+        clipped, gnorm = clip_by_global_norm(g, 1.0)
+        assert float(gnorm) == pytest.approx(np.sqrt(1000.0), rel=1e-5)
+        new_norm = float(jnp.linalg.norm(clipped["a"]))
+        assert new_norm == pytest.approx(1.0, rel=1e-5)
+
+
+def test_cosine_schedule():
+    lr0 = cosine_schedule(jnp.int32(0), peak_lr=1e-3, warmup_steps=10,
+                          total_steps=100)
+    lr_peak = cosine_schedule(jnp.int32(10), peak_lr=1e-3, warmup_steps=10,
+                              total_steps=100)
+    lr_end = cosine_schedule(jnp.int32(100), peak_lr=1e-3, warmup_steps=10,
+                             total_steps=100)
+    assert float(lr0) == 0.0
+    assert float(lr_peak) == pytest.approx(1e-3, rel=1e-5)
+    assert float(lr_end) == pytest.approx(1e-4, rel=1e-3)
+
+
+# ---------------------------------------------------------------------------
+class TestCompression:
+    @settings(max_examples=20, deadline=None)
+    @given(scale=st.floats(1e-3, 1e3))
+    def test_roundtrip_error_bounded(self, scale):
+        g = jnp.asarray(np.random.default_rng(0).standard_normal(256)
+                        * scale, jnp.float32)
+        q, s = compress_int8(g)
+        back = decompress_int8(q, s)
+        # quantization error bounded by half a step
+        assert float(jnp.abs(back - g).max()) <= float(s) / 2 + 1e-6
+
+    def test_error_feedback_unbiased(self):
+        """Sum of dequantized transmissions + final residual == sum of
+        true gradients (error feedback conserves mass)."""
+        rng = np.random.default_rng(1)
+        grads_seq = [
+            {"w": jnp.asarray(rng.standard_normal(64), jnp.float32)}
+            for _ in range(20)]
+        ef = ef_init(grads_seq[0])
+        sent_total = jnp.zeros(64)
+        for g in grads_seq:
+            qtree, ef = compress_with_feedback(g, ef)
+            q, s = qtree["w"]
+            sent_total = sent_total + decompress_int8(q, s)
+        true_total = sum(g["w"] for g in grads_seq)
+        gap = sent_total + ef.residual["w"] - true_total
+        np.testing.assert_allclose(np.asarray(gap), 0.0, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+class TestData:
+    def test_deterministic_skip_ahead(self):
+        d = SyntheticTokens(vocab_size=1000, seq_len=64, global_batch=8,
+                            seed=3)
+        b1 = d.batch_at(17)
+        b2 = d.batch_at(17)
+        np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                      np.asarray(b2["tokens"]))
+        b3 = d.batch_at(18)
+        assert not np.array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b3["tokens"]))
+
+    def test_host_sharding_partitions(self):
+        d = SyntheticTokens(vocab_size=1000, seq_len=32, global_batch=8)
+        h0 = d.batch_at(0, host_index=0, host_count=2)
+        h1 = d.batch_at(0, host_index=1, host_count=2)
+        assert h0["tokens"].shape == (4, 32)
+        assert not np.array_equal(np.asarray(h0["tokens"]),
+                                  np.asarray(h1["tokens"]))
+
+    def test_learnable_structure(self):
+        d = SyntheticTokens(vocab_size=100, seq_len=64, global_batch=4)
+        t = np.asarray(d.batch_at(0)["tokens"])
+        assert t.min() >= 0 and t.max() < 100
+
+
+# ---------------------------------------------------------------------------
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        tree = {"params": {"w": jnp.arange(12.0).reshape(3, 4)},
+                "step": jnp.int32(7)}
+        save_checkpoint(str(tmp_path), 7, tree, meta={"arch": "t"})
+        assert latest_step(str(tmp_path)) == 7
+        like = jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
+        restored, meta, step = restore_checkpoint(str(tmp_path), 7, like)
+        assert meta == {"arch": "t"} and step == 7
+        np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                      np.asarray(tree["params"]["w"]))
+
+    def test_async_save(self, tmp_path):
+        tree = {"w": jnp.ones((8, 8))}
+        t = save_checkpoint(str(tmp_path), 3, tree, async_save=True)
+        t.join(timeout=10)
+        assert latest_step(str(tmp_path)) == 3
+
+    def test_commit_marker_crash_safety(self, tmp_path):
+        tree = {"w": jnp.ones((4,))}
+        save_checkpoint(str(tmp_path), 5, tree)
+        # a torn checkpoint without the marker must be ignored
+        os.makedirs(tmp_path / "step_00000009")
+        assert latest_step(str(tmp_path)) == 5
+
+    def test_structure_mismatch_rejected(self, tmp_path):
+        save_checkpoint(str(tmp_path), 1, {"w": jnp.ones((4,))})
+        with pytest.raises(ValueError):
+            restore_checkpoint(str(tmp_path), 1, {"other": jnp.ones((4,))})
+
+
+# ---------------------------------------------------------------------------
+class TestShardingRules:
+    def _ctx(self):
+        from repro.dist.context import MeshContext
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((1, 1), ("data", "model"))
+        return MeshContext(mesh)
+
+    @pytest.mark.parametrize("arch", ["command-r-35b", "qwen2-vl-72b",
+                                      "deepseek-v2-lite-16b", "zamba2-1.2b",
+                                      "xlstm-1.3b", "whisper-tiny"])
+    def test_specs_cover_all_params(self, arch):
+        from repro.configs import get_config
+        from repro.dist.sharding import param_shardings
+        from repro.models import api
+        cfg = get_config(arch)
+        abs_params = jax.eval_shape(
+            lambda: api.init_params(jax.random.PRNGKey(0), cfg))
+        ctx = self._ctx()
+        sh = param_shardings(cfg, abs_params, ctx)
+        n_leaves = len(jax.tree_util.tree_leaves(abs_params))
+        n_specs = len(jax.tree_util.tree_leaves(
+            sh, is_leaf=lambda x: hasattr(x, "spec")))
+        assert n_leaves == n_specs
+
+    def test_divisibility_guard(self):
+        """Rules must never emit a spec whose axis does not divide."""
+        from repro.configs import get_config
+        from repro.dist.context import MeshContext
+        from repro.dist.sharding import param_shardings
+        from repro.models import api
+        import numpy as np
+        cfg = get_config("qwen1.5-4b")      # 20 heads: awkward divisors
+        mesh = jax.sharding.AbstractMesh(
+            (2, 16), ("data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        ctx = MeshContext(mesh)
+        abs_params = jax.eval_shape(
+            lambda: api.init_params(jax.random.PRNGKey(0), cfg))
+        sh = param_shardings(cfg, abs_params, ctx)
+
+        def check(path, leaf):
+            s = jax.tree_util.tree_leaves_with_path(sh)
+        flat_p = jax.tree_util.tree_leaves(abs_params)
+        flat_s = jax.tree_util.tree_leaves(
+            sh, is_leaf=lambda x: hasattr(x, "spec"))
+        for leaf, nsh in zip(flat_p, flat_s):
+            for dim, axis in zip(leaf.shape, tuple(nsh.spec)):
+                if axis is None:
+                    continue
+                size = int(np.prod([mesh.shape[a] for a in
+                                    (axis if isinstance(axis, tuple)
+                                     else (axis,))]))
+                assert dim % size == 0, (leaf.shape, nsh.spec)
