@@ -2,19 +2,29 @@
 runtime (the DES in ``paper_suite`` simulates SCC timing; these execute
 the same dataflow with actual JAX kernels and verify numerics).
 
-Sizes are parameters — tests use laptop-scale instances; the DES workloads
-carry the paper's §4.2 sizes.
+Each app's kernels are declared once with ``@task`` footprints and called
+naturally inside the runtime scope — the OmpSs front-end the paper
+describes.  Sizes are parameters — tests use laptop-scale instances; the
+DES workloads carry the paper's §4.2 sizes.
 """
 from __future__ import annotations
+
+import functools
 
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import In, InOut, Out, TaskRuntime
+from repro.core import TaskRuntime, task
 from repro.kernels.black_scholes import ops as bs_ops
 from repro.kernels.cholesky import ops as chol_ops
 from repro.kernels.jacobi import ref as jac_ref
 from repro.kernels.matmul import ops as mm_ops
+
+
+# ---------------------------------------------------------------------------
+@task(in_=("spot", "strike", "t", "rate", "vol"), out=("call", "put"))
+def _price(spot, strike, t, rate, vol, call=None, put=None):
+    return bs_ops.black_scholes(spot, strike, t, rate, vol)
 
 
 def black_scholes_app(rt: TaskRuntime, n_options: int = 8192,
@@ -28,19 +38,18 @@ def black_scholes_app(rt: TaskRuntime, n_options: int = 8192,
         "rate": np.full(n_options, 0.03, np.float32),
         "vol": rng.uniform(0.1, 0.6, n_options).astype(np.float32),
     }
-    arrays = {k: rt.from_array(v, (task_options,), name=k)
-              for k, v in cols.items()}
-    call = rt.zeros((n_options,), (task_options,), name="call")
-    put = rt.zeros((n_options,), (task_options,), name="put")
+    with rt.scope():
+        arrays = {k: rt.from_array(v, (task_options,), name=k)
+                  for k, v in cols.items()}
+        call = rt.zeros((n_options,), (task_options,), name="call")
+        put = rt.zeros((n_options,), (task_options,), name="put")
 
-    def price(spot, strike, t, rate, vol):
-        return bs_ops.black_scholes(spot, strike, t, rate, vol)
-
-    for i in range(n_options // task_options):
-        rt.spawn(price, In(arrays["spot"][i]), In(arrays["strike"][i]),
-                 In(arrays["t"][i]), In(arrays["rate"][i]),
-                 In(arrays["vol"][i]), Out(call[i]), Out(put[i]))
-    rt.barrier()
+        futures = [
+            _price(arrays["spot"][i], arrays["strike"][i], arrays["t"][i],
+                   arrays["rate"][i], arrays["vol"][i], call[i], put[i])
+            for i in range(n_options // task_options)]
+        # independent tasks: every future resolves without a barrier
+        rt.wait_all(futures)
     want_c, want_p = bs_ops.black_scholes(
         *[jnp.asarray(cols[k])
           for k in ("spot", "strike", "t", "rate", "vol")])
@@ -51,35 +60,37 @@ def black_scholes_app(rt: TaskRuntime, n_options: int = 8192,
     return call, put
 
 
+# ---------------------------------------------------------------------------
+@task(inout="c", in_=("x", "y"))
+def _gemm(c, x, y):
+    return mm_ops.matmul(x, y, c)
+
+
 def matmul_app(rt: TaskRuntime, n: int = 256, tile: int = 64):
     g = n // tile
     rng = np.random.default_rng(1)
     a = rng.standard_normal((n, n), dtype=np.float32)
     b = rng.standard_normal((n, n), dtype=np.float32)
-    A = rt.from_array(a, (tile, tile), name="A")
-    B = rt.from_array(b, (tile, tile), name="B")
-    C = rt.zeros((n, n), (tile, tile), name="C")
+    with rt.scope():
+        A = rt.from_array(a, (tile, tile), name="A")
+        B = rt.from_array(b, (tile, tile), name="B")
+        C = rt.zeros((n, n), (tile, tile), name="C")
 
-    def gemm(c, x, y):
-        return mm_ops.matmul(x, y, c)
-
-    for i in range(g):
-        for j in range(g):
-            for k in range(g):
-                rt.spawn(gemm, InOut(C[i, j]), In(A[i, k]), In(B[k, j]))
-    rt.barrier()
+        for i in range(g):
+            for j in range(g):
+                for k in range(g):
+                    _gemm(C[i, j], A[i, k], B[k, j])
+        rt.barrier()
     np.testing.assert_allclose(np.asarray(C.gather()), a @ b,
                                rtol=2e-4, atol=2e-4)
     return C
 
 
-def _row_fft(re, im):
+# ---------------------------------------------------------------------------
+@task(in_=("re", "im"), out=("re_out", "im_out"))
+def _row_fft(re, im, re_out=None, im_out=None):
     out = jnp.fft.fft(re + 1j * im, axis=1)
     return out.real.astype(jnp.float32), out.imag.astype(jnp.float32)
-
-
-def _transpose(re, im):
-    return re.T, im.T
 
 
 def fft2d_app(rt: TaskRuntime, n: int = 256, row_block: int = 32,
@@ -91,45 +102,58 @@ def fft2d_app(rt: TaskRuntime, n: int = 256, row_block: int = 32,
     x = (rng.standard_normal((n, n)) +
          1j * rng.standard_normal((n, n))).astype(np.complex64)
 
-    Re = rt.from_array(x.real.astype(np.float32), (row_block, n), name="Re")
-    Im = rt.from_array(x.imag.astype(np.float32), (row_block, n), name="Im")
-    Re1 = rt.zeros((n, n), (row_block, n), name="Re1")
-    Im1 = rt.zeros((n, n), (row_block, n), name="Im1")
-    ReT = rt.zeros((n, n), (tile, tile), name="ReT")
-    ImT = rt.zeros((n, n), (tile, tile), name="ImT")
-    Re2 = rt.zeros((n, n), (row_block, n), name="Re2")
-    Im2 = rt.zeros((n, n), (row_block, n), name="Im2")
+    with rt.scope():
+        Re = rt.from_array(x.real.astype(np.float32), (row_block, n),
+                           name="Re")
+        Im = rt.from_array(x.imag.astype(np.float32), (row_block, n),
+                           name="Im")
+        Re1 = rt.zeros((n, n), (row_block, n), name="Re1")
+        Im1 = rt.zeros((n, n), (row_block, n), name="Im1")
+        ReT = rt.zeros((n, n), (tile, tile), name="ReT")
+        ImT = rt.zeros((n, n), (tile, tile), name="ImT")
+        Re2 = rt.zeros((n, n), (row_block, n), name="Re2")
+        Im2 = rt.zeros((n, n), (row_block, n), name="Im2")
 
-    g = n // row_block
-    for r in range(g):
-        rt.spawn(_row_fft, In(Re[r, 0]), In(Im[r, 0]),
-                 Out(Re1[r, 0]), Out(Im1[r, 0]), name=f"fft1.{r}")
-    assert row_block == tile, "paper's §4.2 uses 32-row blocks + 32x32 tiles"
-    gt = n // tile
-    rows_per_block = row_block // tile if row_block >= tile else 1
-    for i in range(gt):
-        for j in range(gt):
-            # source tile (i, j) lives in row-block i*tile//row_block
-            rb = (i * tile) // row_block
-            def transpose_tile(re_block, im_block, _i=i, _j=j, _rb=rb):
-                r0 = _i * tile - _rb * row_block
-                re = re_block[r0:r0 + tile, _j * tile:(_j + 1) * tile]
-                im = im_block[r0:r0 + tile, _j * tile:(_j + 1) * tile]
+        g = n // row_block
+        for r in range(g):
+            _row_fft(Re[r, 0], Im[r, 0], Re1[r, 0], Im1[r, 0])
+        assert row_block == tile, \
+            "paper's §4.2 uses 32-row blocks + 32x32 tiles"
+        gt = n // tile
+
+        # one TaskFn per distinct (row offset, column) slice — tasks
+        # sharing a body group into one batched dispatch on the staged
+        # executor instead of jit-compiling per tile
+        @functools.lru_cache(maxsize=None)
+        def transpose_task(r0, c0):
+            @task(in_=("re_block", "im_block"), out=("re_t", "im_t"))
+            def transpose_tile(re_block, im_block, re_t=None, im_t=None):
+                re = re_block[r0:r0 + tile, c0:c0 + tile]
+                im = im_block[r0:r0 + tile, c0:c0 + tile]
                 return re.T, im.T
-            rt.spawn(transpose_tile, In(Re1[rb, 0]), In(Im1[rb, 0]),
-                     Out(ReT[j, i]), Out(ImT[j, i]), name=f"tp.{i}.{j}")
-    for r in range(g):
-        # row r of the transposed matrix spans tile-rows of ReT
-        t0, t1 = (r * row_block) // tile, ((r + 1) * row_block - 1) // tile
-        rt.spawn(_row_fft, In(ReT[t0:t1 + 1, :]), In(ImT[t0:t1 + 1, :]),
-                 Out(Re2[r, 0]), Out(Im2[r, 0]), name=f"fft2.{r}")
-    rt.barrier()
+            return transpose_tile
+
+        for i in range(gt):
+            for j in range(gt):
+                # source tile (i, j) lives in row-block i*tile//row_block
+                rb = (i * tile) // row_block
+                r0 = i * tile - rb * row_block
+                transpose_task(r0, j * tile)(Re1[rb, 0], Im1[rb, 0],
+                                             ReT[j, i], ImT[j, i])
+        for r in range(g):
+            # row r of the transposed matrix spans tile-rows of ReT
+            t0 = (r * row_block) // tile
+            t1 = ((r + 1) * row_block - 1) // tile
+            _row_fft(ReT[t0:t1 + 1, :], ImT[t0:t1 + 1, :],
+                     Re2[r, 0], Im2[r, 0])
+        rt.barrier()
     got = np.asarray(Re2.gather()) + 1j * np.asarray(Im2.gather())
     want = np.fft.fft2(x).T       # pipeline output stays transposed
     np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-1)
     return Re2, Im2
 
 
+# ---------------------------------------------------------------------------
 def jacobi_app(rt: TaskRuntime, n: int = 256, tile: int = 64,
                iters: int = 4):
     """Tiled 5-point Jacobi: each task reads its tile plus the available
@@ -138,30 +162,50 @@ def jacobi_app(rt: TaskRuntime, n: int = 256, tile: int = 64,
     rng = np.random.default_rng(3)
     x0 = rng.standard_normal((n, n)).astype(np.float32)
     g = n // tile
-    bufs = [rt.from_array(x0, (tile, tile), name="J0"),
-            rt.zeros((n, n), (tile, tile), name="J1")]
+    with rt.scope():
+        bufs = [rt.from_array(x0, (tile, tile), name="J0"),
+                rt.zeros((n, n), (tile, tile), name="J1")]
 
-    def make_stencil(i, j, i0, j0):
-        def fn(region):
-            full = jac_ref.jacobi_step(region)
-            r0, c0 = (i - i0) * tile, (j - j0) * tile
-            return full[r0:r0 + tile, c0:c0 + tile]
-        return fn
+        # the body depends only on the tile's offset inside its halo
+        # (<= 4 distinct fns), so identical-shape tasks share one TaskFn
+        # and batch on the staged executor
+        @functools.lru_cache(maxsize=None)
+        def stencil_task(r0, c0):
+            @task(in_="halo", out="dest")
+            def stencil(halo, dest=None):
+                full = jac_ref.jacobi_step(halo)
+                return full[r0:r0 + tile, c0:c0 + tile]
+            return stencil
 
-    for it in range(iters):
-        s, d = bufs[it % 2], bufs[(it + 1) % 2]
-        for i in range(g):
-            for j in range(g):
-                i0, i1 = max(i - 1, 0), min(i + 2, g)
-                j0, j1 = max(j - 1, 0), min(j + 2, g)
-                rt.spawn(make_stencil(i, j, i0, j0),
-                         In(s[i0:i1, j0:j1]), Out(d[i, j]),
-                         name=f"jac{it}.{i}.{j}")
-    rt.barrier()
+        for it in range(iters):
+            s, d = bufs[it % 2], bufs[(it + 1) % 2]
+            for i in range(g):
+                for j in range(g):
+                    i0, i1 = max(i - 1, 0), min(i + 2, g)
+                    j0, j1 = max(j - 1, 0), min(j + 2, g)
+                    stencil_task((i - i0) * tile, (j - j0) * tile)(
+                        s[i0:i1, j0:j1], d[i, j])
+        rt.barrier()
     want = np.asarray(jac_ref.jacobi(jnp.asarray(x0), iters=iters))
     got = np.asarray(bufs[iters % 2].gather())
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
     return bufs[iters % 2]
+
+
+# ---------------------------------------------------------------------------
+@task(inout="a")
+def _potrf(a):
+    return chol_ops.potrf(a)
+
+
+@task(in_="l", inout="a")
+def _trsm(l, a):
+    return chol_ops.trsm(l, a)
+
+
+@task(inout="c", in_=("x", "y"))
+def _update(c, x, y):
+    return chol_ops.update(c, x, y)
 
 
 def cholesky_app(rt: TaskRuntime, n: int = 256, tile: int = 64):
@@ -169,19 +213,17 @@ def cholesky_app(rt: TaskRuntime, n: int = 256, tile: int = 64):
     rng = np.random.default_rng(4)
     m = rng.standard_normal((n, n)).astype(np.float32)
     spd = m @ m.T + n * np.eye(n, dtype=np.float32)
-    A = rt.from_array(spd, (tile, tile), name="Chol")
+    with rt.scope():
+        A = rt.from_array(spd, (tile, tile), name="Chol")
 
-    def update(c, x, y):
-        return chol_ops.update(c, x, y)
-
-    for k in range(g):
-        rt.spawn(chol_ops.potrf, InOut(A[k, k]))
-        for i in range(k + 1, g):
-            rt.spawn(chol_ops.trsm, In(A[k, k]), InOut(A[i, k]))
-        for i in range(k + 1, g):
-            for j in range(k + 1, i + 1):
-                rt.spawn(update, InOut(A[i, j]), In(A[i, k]), In(A[j, k]))
-    rt.barrier()
+        for k in range(g):
+            _potrf(A[k, k])
+            for i in range(k + 1, g):
+                _trsm(A[k, k], A[i, k])
+            for i in range(k + 1, g):
+                for j in range(k + 1, i + 1):
+                    _update(A[i, j], A[i, k], A[j, k])
+        rt.barrier()
     got = np.tril(np.asarray(A.gather()))
     want = np.asarray(jnp.linalg.cholesky(jnp.asarray(spd)))
     np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)

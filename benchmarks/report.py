@@ -1,11 +1,15 @@
-"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
-dry-run JSON records.  Run after ``repro.launch.dryrun``:
+"""Generate the EXPERIMENTS.md §Dry-run, §Roofline and §Runtime tables.
+The dry-run sections read JSON records produced by ``repro.launch.dryrun``;
+the runtime section executes the paper's five applications on the task
+runtime and tabulates their typed :class:`~repro.core.RuntimeStats`.
 
     PYTHONPATH=src:. python -m benchmarks.report > experiments/tables.md
 """
 from __future__ import annotations
 
 import json
+
+from repro.core import RuntimeStats, RuntimeConfig, TaskRuntime
 
 from .roofline import build_table, load_all, model_params
 
@@ -59,6 +63,37 @@ def params_table() -> str:
     return "\n".join(rows)
 
 
+def runtime_stats_table(entries: list[tuple[str, RuntimeStats]]) -> str:
+    """One row per (label, RuntimeStats) — the typed replacement for the
+    old ``stats()`` dict feeding EXPERIMENTS.md §Runtime."""
+    rows = ["| app | tasks | deps | waves | grouped | spawn us/task | "
+            "barrier s | waits (region/future) |",
+            "|---|---|---|---|---|---|---|---|"]
+    for label, s in entries:
+        rows.append(
+            f"| {label} | {s.tasks_spawned} | {s.deps_found} | "
+            f"{s.waves if s.waves is not None else '-'} | "
+            f"{s.grouped_dispatches if s.grouped_dispatches is not None else '-'} | "
+            f"{s.spawn_us_per_task:.1f} | {s.barrier_time_s:.3f} | "
+            f"{s.region_waits}/{s.futures_resolved} |")
+    return "\n".join(rows)
+
+
+def collect_runtime_stats(executor: str = "staged") \
+        -> list[tuple[str, RuntimeStats]]:
+    """Run the five paper apps and collect their RuntimeStats."""
+    from .apps import APPS
+    entries = []
+    for name in sorted(APPS):
+        rt = TaskRuntime(RuntimeConfig(executor=executor, n_workers=4))
+        try:
+            APPS[name](rt)
+            entries.append((name, rt.stats()))
+        finally:
+            rt.shutdown()
+    return entries
+
+
 def main():
     print("## Params\n")
     print(params_table())
@@ -66,6 +101,8 @@ def main():
     print(dryrun_table())
     print("\n## Roofline (single pod)\n")
     print(roofline_table())
+    print("\n## Runtime (task-graph apps, staged executor)\n")
+    print(runtime_stats_table(collect_runtime_stats()))
 
 
 if __name__ == "__main__":

@@ -19,28 +19,28 @@ def runtime_overheads(report) -> dict:
     """Master-side costs of the real (host) runtime: spawn + dependence
     analysis latency — the quantity the paper's master-bottleneck finding
     hinges on."""
-    import jax.numpy as jnp
-    from repro.core import In, InOut, TaskRuntime
+    from repro.core import TaskRuntime, task
 
+    @task(inout="x")
     def tick(x):
         return x * 1.0
 
-    rt = TaskRuntime(executor="staged")
-    A = rt.zeros((64, 64), (8, 8))
-    # warm up
-    rt.spawn(tick, InOut(A[0, 0]))
-    rt.barrier()
-    n = 2000
-    t0 = time.perf_counter()
-    for i in range(n):
-        rt.spawn(tick, InOut(A[i % 8, (i // 8) % 8]))
-    dt = time.perf_counter() - t0
-    rt.barrier()
-    spawn_us = dt / n * 1e6
-    report("runtime_overhead", "spawn_us_per_task", round(spawn_us, 2))
-    s = rt.stats()
-    report("runtime_overhead", "blocks_walked_per_task",
-           s["blocks_walked"] / max(s["tasks_spawned"], 1))
+    with TaskRuntime(executor="staged") as rt:
+        A = rt.zeros((64, 64), (8, 8))
+        # warm up
+        tick(A[0, 0])
+        rt.barrier()
+        n = 2000
+        t0 = time.perf_counter()
+        for i in range(n):
+            tick(A[i % 8, (i // 8) % 8])
+        dt = time.perf_counter() - t0
+        rt.barrier()
+        spawn_us = dt / n * 1e6
+        report("runtime_overhead", "spawn_us_per_task", round(spawn_us, 2))
+        s = rt.stats()
+        report("runtime_overhead", "blocks_walked_per_task",
+               s.blocks_walked / max(s.tasks_spawned, 1))
     return {"spawn_us": spawn_us}
 
 

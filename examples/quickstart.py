@@ -1,20 +1,27 @@
 """Quickstart: the BDDT-SCC programming model in five minutes.
 
-Spawn tasks with declared footprints (In/Out/InOut over block regions);
-the runtime discovers dependencies block-by-block, schedules tasks over
-workers through bounded MPB-style descriptor rings, and a barrier drains
-everything.  Swap ``executor=`` between the paper-faithful dynamic host
-runtime and the TPU-idiomatic staged wavefront executor — results are
-identical (serial elision).
+Declare each kernel's footprint once with ``@task`` (OmpSs's pragma as a
+decorator), then call it naturally inside a runtime scope — every call
+spawns a task, the runtime discovers dependencies block-by-block, and
+synchronization is exactly as fine-grained as you ask for:
+
+* ``future.result()``    — force one task's dependence cone;
+* ``rt.wait_on(region)`` — taskwait scoped to a footprint;
+* ``rt.barrier()``       — global drain (implied at scope exit).
+
+Swap ``executor=`` between the paper-faithful dynamic host runtime and
+the TPU-idiomatic staged wavefront executor — results are identical
+(serial elision).  Outside a runtime scope the decorated function runs
+eagerly, so ``gemm_tile(c, a, b)`` is its own reference implementation.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
-import jax.numpy as jnp
 
-from repro.core import In, InOut, TaskRuntime
+from repro.core import RuntimeConfig, TaskRuntime, task
 
 
+@task(inout="c", in_=("a", "b"))
 def gemm_tile(c, a, b):
     """One tile task: C[i,j] += A[i,k] @ B[k,j]."""
     return c + a @ b
@@ -28,29 +35,42 @@ def main():
     b = rng.standard_normal((n, n), dtype=np.float32)
 
     for executor in ("host", "staged"):
-        rt = TaskRuntime(executor=executor, n_workers=4, mpb_slots=8,
-                         policy="locality")
-        A = rt.from_array(a, (tile, tile), name="A")
-        B = rt.from_array(b, (tile, tile), name="B")
-        C = rt.zeros((n, n), (tile, tile), name="C")
+        cfg = RuntimeConfig(executor=executor, n_workers=4, mpb_slots=8,
+                            policy="locality")
+        with TaskRuntime(cfg) as rt:
+            A = rt.from_array(a, (tile, tile), name="A")
+            B = rt.from_array(b, (tile, tile), name="B")
+            C = rt.zeros((n, n), (tile, tile), name="C")
 
-        # OmpSs-style task loop: footprints give the runtime everything it
-        # needs — no locks, no barriers between dependent tasks
-        for i in range(g):
-            for j in range(g):
-                for k in range(g):
-                    rt.spawn(gemm_tile, InOut(C[i, j]), In(A[i, k]),
-                             In(B[k, j]))
-        rt.barrier()
+            # OmpSs-style task loop: footprints give the runtime everything
+            # it needs — no locks, no barriers between dependent tasks
+            futures = {}
+            for i in range(g):
+                for j in range(g):
+                    for k in range(g):
+                        futures[i, j, k] = gemm_tile(C[i, j], A[i, k],
+                                                     B[k, j])
 
-        got = np.asarray(C.gather())
-        np.testing.assert_allclose(got, a @ b, rtol=2e-4, atol=2e-4)
-        s = rt.stats()
-        print(f"[{executor:6s}] {s['tasks_spawned']} tasks, "
-              f"{s['deps_found']} dependencies, "
-              f"spawn {1e6 * s['spawn_time_s'] / s['tasks_spawned']:.1f} "
-              f"us/task -> result verified")
-        rt.shutdown()
+            # force one output tile: runs only its g-task dependence chain
+            tile00 = futures[0, 0, g - 1].result()
+            np.testing.assert_allclose(np.asarray(tile00),
+                                       a[:tile] @ b[:, :tile],
+                                       rtol=2e-4, atol=2e-4)
+
+            # region-scoped taskwait: top block row is done after this,
+            # unrelated tiles may still be in flight
+            rt.wait_on(C[0, 0:g])
+
+            rt.barrier()
+            got = np.asarray(C.gather())
+            np.testing.assert_allclose(got, a @ b, rtol=2e-4, atol=2e-4)
+
+            s = rt.stats()
+            print(f"[{executor:6s}] {s.tasks_spawned} tasks, "
+                  f"{s.deps_found} dependencies, "
+                  f"{s.spawn_us_per_task:.1f} us/spawn, "
+                  f"{s.futures_resolved} futures, "
+                  f"{s.region_waits} region waits -> result verified")
 
 
 if __name__ == "__main__":

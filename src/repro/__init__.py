@@ -1,4 +1,8 @@
 """BDDT-SCC reproduction: task-parallel dataflow runtime + multi-pod JAX
 LM framework.  See README.md / DESIGN.md / EXPERIMENTS.md."""
 
+from . import jax_compat as _jax_compat
+
+_jax_compat.install()
+
 __version__ = "1.0.0"

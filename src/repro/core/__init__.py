@@ -3,6 +3,7 @@
 The paper's primary contribution — an OmpSs-style task-parallel runtime for
 non cache-coherent hardware — implemented as:
 
+* :mod:`api`        — the OmpSs front-end: @task footprints, futures, config
 * :mod:`blocks`     — the custom block allocator (BlockArray / Region / In-Out-InOut)
 * :mod:`deps`       — block-level dynamic dependence analysis (BDDT)
 * :mod:`graph`      — task descriptors, descriptor pool, ready/completion queues
@@ -14,7 +15,12 @@ non cache-coherent hardware — implemented as:
 * :mod:`sim`        — discrete-event simulation of the SCC runtime (Figs 5-7)
 * :mod:`pipeline`   — pipeline-parallel schedules derived by dependence analysis
 """
+from .api import (RuntimeConfig, RuntimeStats, TaskFuture, current_runtime,
+                  task)
 from .blocks import BlockArray, In, InOut, Out, Region
+from .executor import Executor
 from .runtime import TaskRuntime
 
-__all__ = ["TaskRuntime", "BlockArray", "In", "Out", "InOut", "Region"]
+__all__ = ["TaskRuntime", "BlockArray", "In", "Out", "InOut", "Region",
+           "task", "TaskFuture", "RuntimeConfig", "RuntimeStats",
+           "Executor", "current_runtime"]

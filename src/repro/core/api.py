@@ -1,0 +1,410 @@
+"""The declarative OmpSs-style front-end: ``@task`` footprint decorators,
+task futures, and runtime configuration.
+
+The paper's programming model is a pragma on the *function*: each argument
+is annotated ``in`` / ``out`` / ``inout`` once, and every call site spawns
+a task whose footprint the runtime synchronizes automatically.  This module
+is that front-end in Python::
+
+    from repro.core import TaskRuntime, task
+
+    @task(inout="c", in_=("a", "b"))
+    def gemm(c, a, b):
+        return c + a @ b
+
+    with TaskRuntime(executor="staged") as rt:
+        A = rt.from_array(a, (64, 64))
+        B = rt.from_array(b, (64, 64))
+        C = rt.zeros((n, n), (64, 64))
+        for i in range(g):
+            for j in range(g):
+                for k in range(g):
+                    gemm(C[i, j], A[i, k], B[k, j])   # spawns a task
+        rt.wait_on(C[0, 0])        # region-scoped taskwait (§3.3 sync)
+        ...                        # exit barrier drains the rest
+
+Calling a decorated function *outside* a runtime scope (or from a worker
+thread) with plain arrays runs it eagerly — the decorated function is its
+own serial-elision reference.
+
+Spawns return a :class:`TaskFuture`; ``future.result()`` forces only that
+task's dependence cone, not the whole graph.  :class:`RuntimeConfig`
+gathers what used to be nine ``TaskRuntime.__init__`` kwargs, and
+:class:`RuntimeStats` is the typed replacement for the old ``stats()``
+dict (it still indexes like one during the deprecation window).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import inspect
+import threading
+from dataclasses import dataclass
+from typing import Callable
+
+from .blocks import AccessMode, BlockArray, In, InOut, Out, Region
+from .graph import TaskDescriptor
+
+__all__ = ["task", "TaskFn", "TaskFuture", "RuntimeConfig", "RuntimeStats",
+           "current_runtime"]
+
+
+# ---------------------------------------------------------------------------
+# the ambient runtime scope (``with rt:``)
+_scope = threading.local()
+
+
+def current_runtime():
+    """The innermost active ``TaskRuntime`` on this thread, or None.
+
+    Worker threads never see a scope (it is thread-local), so a task body
+    that calls another ``@task`` function runs it eagerly instead of
+    recursively spawning — master-only task initiation, as in the paper.
+    """
+    stack = getattr(_scope, "stack", None)
+    return stack[-1] if stack else None
+
+
+def _push_runtime(rt) -> None:
+    stack = getattr(_scope, "stack", None)
+    if stack is None:
+        stack = _scope.stack = []
+    stack.append(rt)
+
+
+def _pop_runtime(rt) -> None:
+    stack = getattr(_scope, "stack", [])
+    if not stack or stack[-1] is not rt:
+        raise RuntimeError("runtime scope exited out of order")
+    stack.pop()
+
+
+@contextlib.contextmanager
+def suspend_runtime_scope():
+    """Mask the ambient scope while a task body executes.
+
+    Sequential and staged executors run task bodies on the master
+    thread, where the spawning scope is still active; without masking, a
+    body that calls another ``@task`` function would recursively spawn
+    there but run eagerly on a host worker — same program, different
+    executors, different behavior.  Masking restores master-only task
+    initiation everywhere."""
+    stack = getattr(_scope, "stack", None)
+    saved = stack[:] if stack else []
+    if stack:
+        stack.clear()
+    try:
+        yield
+    finally:
+        if saved:
+            stack = getattr(_scope, "stack", None)
+            if stack is None:
+                stack = _scope.stack = []
+            stack[:] = saved
+
+
+# ---------------------------------------------------------------------------
+# configuration
+_EXECUTORS = ("sequential", "host", "staged", "sim")
+
+
+@dataclass(frozen=True)
+class RuntimeConfig:
+    """Everything that shapes a :class:`~repro.core.TaskRuntime`.
+
+    * ``executor``    — "sequential" (serial-elision oracle), "host" (the
+      paper's dynamic master/worker protocol), "staged" (wavefront
+      batching) or "sim" (timing-only DES on the SCC cost model).
+    * ``n_workers`` / ``mpb_slots`` — worker count and per-worker MPB ring
+      depth (§3.2).
+    * ``pool_capacity`` — pre-allocated task-descriptor pool (§3.3).
+    * ``policy``      — running-mode scheduling policy (§3.4).
+    * ``placement`` / ``n_controllers`` — block -> memory-controller map.
+    * ``group_waves`` — staged executor: fuse identical tile tasks of a
+      wavefront into one batched dispatch.
+    * ``sim_cost_fn`` — "sim" executor: ``td -> (flops, bytes)``; defaults
+      to a footprint-derived estimate.
+    """
+    executor: str = "host"
+    n_workers: int = 4
+    mpb_slots: int = 16
+    pool_capacity: int = 4096
+    policy: str = "round_robin"
+    placement: str = "striped"
+    n_controllers: int = 4
+    group_waves: bool = True
+    seed: int = 0
+    sim_cost_fn: Callable | None = None
+
+    def validate(self) -> "RuntimeConfig":
+        from .scheduler import POLICIES
+        if self.executor not in _EXECUTORS:
+            raise ValueError(f"executor must be one of {_EXECUTORS}, "
+                             f"got {self.executor!r}")
+        if self.policy not in POLICIES:
+            raise ValueError(f"policy must be one of {tuple(POLICIES)}, "
+                             f"got {self.policy!r}")
+        for fld in ("n_workers", "mpb_slots", "pool_capacity",
+                    "n_controllers"):
+            if getattr(self, fld) < 1:
+                raise ValueError(f"{fld} must be >= 1")
+        return self
+
+    def replace(self, **overrides) -> "RuntimeConfig":
+        return dataclasses.replace(self, **overrides)
+
+
+# ---------------------------------------------------------------------------
+# statistics
+@dataclass
+class RuntimeStats:
+    """Typed runtime instrumentation (was: an ad-hoc ``stats()`` dict).
+
+    Core counters always present; executor-specific fields are None when
+    the executor does not produce them.  Dict-style access
+    (``stats["deps_found"]``, ``.get``, ``.as_dict()``) is kept for the
+    deprecation window.
+    """
+    tasks_spawned: int = 0
+    tasks_scheduled: int = 0
+    polling_rounds: int = 0
+    blocks_walked: int = 0
+    deps_found: int = 0
+    spawn_time_s: float = 0.0
+    barrier_time_s: float = 0.0
+    wait_time_s: float = 0.0
+    region_waits: int = 0
+    futures_resolved: int = 0
+    mpb_full_rejections: int = 0
+    # host executor
+    worker_busy_s: list[float] | None = None
+    worker_tasks: list[int] | None = None
+    # staged executor
+    waves: int | None = None
+    grouped_dispatches: int | None = None
+    # sim executor
+    predicted_total_s: float | None = None
+
+    def as_dict(self) -> dict:
+        return {k: v for k, v in dataclasses.asdict(self).items()
+                if v is not None}
+
+    def __getitem__(self, key: str):
+        if not hasattr(self, key):
+            raise KeyError(key)
+        return getattr(self, key)
+
+    def get(self, key: str, default=None):
+        return getattr(self, key, default)
+
+    @property
+    def spawn_us_per_task(self) -> float:
+        if not self.tasks_spawned:
+            return 0.0
+        return 1e6 * self.spawn_time_s / self.tasks_spawned
+
+
+# ---------------------------------------------------------------------------
+# futures
+class TaskFuture:
+    """A handle on one spawned task.
+
+    ``result()`` synchronizes on *this task only*: the executor runs (or
+    waits for) the task's dependence cone and leaves every unrelated
+    pending task alone, then returns the task's output value(s) — one
+    array per ``out``/``inout`` argument, in argument order.
+    """
+
+    __slots__ = ("_rt", "_td")
+
+    def __init__(self, rt, td: TaskDescriptor):
+        self._rt = rt
+        self._td = td
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def descriptor(self) -> TaskDescriptor:
+        return self._td
+
+    @property
+    def tid(self) -> int:
+        return self._td.tid
+
+    @property
+    def name(self) -> str:
+        return self._td.name or self._td.fn.__name__
+
+    @property
+    def exec_order(self) -> int | None:
+        return self._td.exec_order
+
+    def done(self) -> bool:
+        """True once the task executed (its outputs are in place)."""
+        return self._td.is_complete
+
+    # -- synchronization ----------------------------------------------------
+    def wait(self) -> "TaskFuture":
+        """Block until done, forcing only this task's dependence cone."""
+        if not self._td.is_complete:
+            self._rt._wait_tasks([self._td], kind="future")
+        return self
+
+    def result(self):
+        """Wait, then return the value(s) *this task* produced.
+
+        Outputs are captured at execution, so the result is deterministic
+        across executors and immune to later writers overwriting the same
+        region (read the region itself for current-memory semantics)."""
+        self.wait()
+        outs = self._td.output_values
+        if outs is None:
+            raise RuntimeError(
+                f"task {self.name}#{self.tid} completed without captured "
+                "outputs — executor='sim' is timing-only and never "
+                "computes task values")
+        if not outs:
+            return None
+        return outs[0] if len(outs) == 1 else tuple(outs)
+
+    def __repr__(self):
+        return f"<TaskFuture {self.name}#{self.tid} " \
+               f"{'done' if self.done() else 'pending'}>"
+
+
+# ---------------------------------------------------------------------------
+# the @task decorator
+def _names(arg) -> tuple[str, ...]:
+    if arg is None:
+        return ()
+    if isinstance(arg, str):
+        return (arg,)
+    return tuple(arg)
+
+
+def as_region(value, param: str) -> Region:
+    if isinstance(value, Region):
+        return value
+    if isinstance(value, BlockArray):
+        return value.whole
+    if isinstance(value, AccessMode):
+        raise TypeError(
+            f"parameter {param!r}: pass the region directly (e.g. A[i, j]) "
+            "— the @task decorator already declares the access mode")
+    raise TypeError(
+        f"parameter {param!r}: expected a Region (e.g. A[i, j]) or "
+        f"BlockArray, got {type(value).__name__}")
+
+
+class TaskFn:
+    """A function with a declared footprint; calling it spawns a task."""
+
+    def __init__(self, fn: Callable, in_=(), out=(), inout=()):
+        self.fn = fn
+        self.__name__ = fn.__name__
+        self.__doc__ = fn.__doc__
+        self.__wrapped__ = fn
+        self._sig = inspect.signature(fn)
+        modes: dict[str, type[AccessMode]] = {}
+        for names, mode in ((_names(in_), In), (_names(out), Out),
+                            (_names(inout), InOut)):
+            for n in names:
+                if n in modes:
+                    raise ValueError(
+                        f"@task({fn.__name__}): parameter {n!r} declared "
+                        "in more than one footprint list")
+                if n not in self._sig.parameters:
+                    raise ValueError(
+                        f"@task({fn.__name__}): no parameter named {n!r} "
+                        f"(has {tuple(self._sig.parameters)})")
+                modes[n] = mode
+        # params without a footprint must carry defaults (closure-capture
+        # idiom, e.g. ``def f(x, dest=None, _i=i)``); they are never bound
+        # at spawn sites
+        missing = [n for n, p in self._sig.parameters.items()
+                   if n not in modes and p.default is inspect.Parameter.empty]
+        if missing:
+            raise ValueError(
+                f"@task({fn.__name__}): every required parameter needs a "
+                f"footprint (in_/out/inout); missing {missing}")
+        if not any(m.WRITES for m in modes.values()):
+            raise ValueError(
+                f"@task({fn.__name__}): at least one out/inout parameter "
+                "is required (tasks communicate through their footprints)")
+        # argument order == parameter order, the TaskDescriptor contract:
+        # at execution the runtime calls fn(*reads_values), so the READS
+        # params (in_/inout) must be exactly the leading positional
+        # params, and everything after them (out-only params, closure
+        # captures) must carry defaults since it receives no value
+        params = list(self._sig.parameters)
+        reads = [n for n in params if n in modes and modes[n].READS]
+        if params[:len(reads)] != reads:
+            raise ValueError(
+                f"@task({fn.__name__}): in_/inout parameters must come "
+                f"first in the signature (the task body receives their "
+                f"values positionally); got order {params}")
+        for n in params[len(reads):]:
+            if self._sig.parameters[n].default is inspect.Parameter.empty:
+                raise ValueError(
+                    f"@task({fn.__name__}): parameter {n!r} receives no "
+                    f"value at execution (it is not in_/inout) and must "
+                    f"declare a default, e.g. {n}=None")
+        self.modes = {n: modes[n] for n in params if n in modes}
+
+    def __call__(self, *args, **kwargs):
+        rt = current_runtime()
+        if rt is None:
+            if any(isinstance(a, (Region, BlockArray))
+                   for a in (*args, *kwargs.values())):
+                raise RuntimeError(
+                    f"{self.__name__}: called with block regions but no "
+                    "active runtime scope — wrap the call in `with rt:` "
+                    "(or `with rt.scope():`) to spawn it as a task")
+            return self.fn(*args, **kwargs)      # eager / serial elision
+        bound = self._sig.bind(*args, **kwargs)
+        extra = [n for n in bound.arguments if n not in self.modes]
+        if extra:
+            raise TypeError(
+                f"{self.__name__}: parameters without a footprint are "
+                f"closure captures and cannot be bound at a spawn site: "
+                f"{extra}")
+        missing = [n for n in self.modes if n not in bound.arguments]
+        if missing:
+            raise TypeError(
+                f"{self.__name__}: every footprint parameter needs a "
+                f"region at the call site; missing {missing}")
+        access = tuple(
+            self.modes[name](as_region(bound.arguments[name], name))
+            for name in self.modes)
+        return rt.spawn(self.fn, *access, name=self.__name__)
+
+    def spawn_on(self, rt, *args, **kwargs) -> TaskFuture:
+        """Spawn explicitly on ``rt`` (no ambient scope needed)."""
+        _push_runtime(rt)
+        try:
+            return self(*args, **kwargs)
+        finally:
+            _pop_runtime(rt)
+
+    def __repr__(self):
+        ann = ", ".join(f"{n}:{m.__name__}" for n, m in self.modes.items())
+        return f"<task {self.__name__}({ann})>"
+
+
+def task(fn: Callable | None = None, *, in_=(), out=(), inout=()):
+    """Declare a task function's footprint (OmpSs ``#pragma omp task``).
+
+    ``in_`` / ``out`` / ``inout`` each name one parameter (a string) or
+    several (an iterable).  Every parameter of the function must appear in
+    exactly one list; at call sites inside a ``with rt:`` scope each
+    receives a block :class:`Region` (or a whole :class:`BlockArray`).
+    The function body receives materialized arrays for its ``in_`` and
+    ``inout`` parameters (in parameter order) and returns one array per
+    ``out``/``inout`` parameter (in parameter order).
+    """
+    def wrap(f):
+        return TaskFn(f, in_=in_, out=out, inout=inout)
+    if fn is not None:                 # bare @task is an error we explain
+        raise TypeError(
+            "@task needs footprint declarations, e.g. "
+            "@task(inout='c', in_=('a', 'b'))")
+    return wrap

@@ -83,6 +83,31 @@ class DependenceAnalyzer:
         self.deps_found += len(deps)
         return deps
 
+    def tasks_touching(self, blocks, mode: str = "in") -> set["TaskDescriptor"]:
+        """Live tasks a *synchronization* on ``blocks`` must wait for —
+        the same rules task initiation applies, so ``wait_on(region)`` is
+        exactly the paper's automatic sync scoped to a footprint:
+
+        * ``mode="in"``    — pending writers (the data must be produced);
+        * ``mode="out"`` / ``"inout"`` — writers *and* readers (the caller
+          intends to overwrite, so WAR orderings count too).
+        """
+        if mode not in ("in", "out", "inout"):
+            raise ValueError(f"mode must be in/out/inout, got {mode!r}")
+        found: set[TaskDescriptor] = set()
+        for block in blocks:
+            m = self._meta.get(block)
+            if m is None:
+                continue
+            w = m.last_writer
+            if w is not None and not w.is_complete:
+                found.add(w)
+            if mode != "in":
+                for r in m.readers:
+                    if not r.is_complete:
+                        found.add(r)
+        return found
+
     def forget_completed(self, task: "TaskDescriptor") -> None:
         """Drop references to a released task so metadata stays O(live tasks)
         (the paper recycles descriptors from a pre-allocated pool; stale

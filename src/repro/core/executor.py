@@ -17,27 +17,80 @@ from __future__ import annotations
 import threading
 import time
 from collections import defaultdict
-from typing import Callable
+from typing import Callable, Iterable, Protocol, Sequence, runtime_checkable
 
 import jax
 import jax.numpy as jnp
 
+from .api import suspend_runtime_scope
 from .graph import TaskDescriptor, TaskGraph, TaskState
 from .mpb import MPBQueue
 from .scheduler import MasterScheduler
 
-__all__ = ["SequentialExecutor", "HostExecutor", "StagedExecutor"]
+__all__ = ["Executor", "ExecutorBase", "SequentialExecutor", "HostExecutor",
+           "StagedExecutor", "dependence_cone"]
+
+
+@runtime_checkable
+class Executor(Protocol):
+    """What the runtime front-end requires of an execution strategy.
+
+    Implementations: :class:`SequentialExecutor` (serial elision),
+    :class:`HostExecutor` (the paper's dynamic master/worker protocol),
+    :class:`StagedExecutor` (wavefront batching for SPMD hardware) and
+    :class:`repro.core.sim.SimExecutor` (timing-only discrete-event
+    prediction on the SCC cost model).
+    """
+
+    def on_spawn(self, td: TaskDescriptor, ready: bool) -> None:
+        """A task was initiated; ``ready`` means no unresolved deps."""
+        ...
+
+    def barrier(self) -> None:
+        """Global synchronization: return once every spawned task ran."""
+        ...
+
+    def wait_for(self, tds: Sequence[TaskDescriptor]) -> None:
+        """Partial synchronization: return once ``tds`` (and hence their
+        dependence cones) completed — unrelated tasks need not have run."""
+        ...
+
+    def reclaim(self) -> None:
+        """Make progress so a descriptor can be recycled (pool exhausted)."""
+        ...
+
+    def shutdown(self) -> None:
+        ...
+
+
+def dependence_cone(targets: Iterable[TaskDescriptor]) -> set[TaskDescriptor]:
+    """The incomplete transitive predecessors of ``targets`` (targets
+    included) — exactly what must run before a wait on them returns."""
+    cone: set[TaskDescriptor] = set()
+    stack = [td for td in targets if not td.is_complete]
+    while stack:
+        td = stack.pop()
+        if td in cone:
+            continue
+        cone.add(td)
+        stack.extend(p for p in td.preds
+                     if not p.is_complete and p not in cone)
+    return cone
 
 
 class ExecutorBase:
-    """Interface between the runtime front-end (spawn/barrier) and an
-    execution strategy."""
+    """Shared defaults for :class:`Executor` implementations."""
 
     def on_spawn(self, td: TaskDescriptor, ready: bool) -> None:
         raise NotImplementedError
 
     def barrier(self) -> None:
         raise NotImplementedError
+
+    def wait_for(self, tds: Sequence[TaskDescriptor]) -> None:
+        """Conservative default: a full barrier satisfies any wait."""
+        if any(not td.is_complete for td in tds):
+            self.barrier()
 
     def reclaim(self) -> None:
         """Make progress so a descriptor can be recycled (pool exhausted)."""
@@ -67,6 +120,10 @@ class SequentialExecutor(ExecutorBase):
 
     def barrier(self) -> None:
         assert self.graph.quiescent
+
+    def wait_for(self, tds) -> None:
+        # every task ran at its spawn; nothing can be outstanding
+        assert all(td.is_complete for td in tds)
 
 
 # ---------------------------------------------------------------------------
@@ -122,6 +179,16 @@ class HostExecutor(ExecutorBase):
             if not self.graph.quiescent:
                 time.sleep(0)  # yield to worker threads
 
+    def wait_for(self, tds) -> None:
+        """Polling mode scoped to ``tds``: the master polls/schedules/
+        releases until the waited-on tasks completed, then returns to the
+        main program — in-flight unrelated tasks keep running on their
+        workers undisturbed."""
+        while not all(td.is_complete for td in tds):
+            self.scheduler.polling_step()
+            if not all(td.is_complete for td in tds):
+                time.sleep(0)
+
     def reclaim(self) -> None:
         # §3.3: master blocks until a task completes, freeing a descriptor
         while self.scheduler.pool.free == 0:
@@ -162,8 +229,9 @@ class StagedExecutor(ExecutorBase):
         self.pending.append(td)
 
     # -- wavefront layering ---------------------------------------------------
-    def _wavefronts(self) -> list[list[TaskDescriptor]]:
-        indeg = {td: td.deps_remaining for td in self.pending}
+    def _wavefronts(self, tasks: list[TaskDescriptor]) \
+            -> list[list[TaskDescriptor]]:
+        indeg = {td: td.deps_remaining for td in tasks}
         frontier = [td for td, d in indeg.items() if d == 0]
         waves = []
         seen = 0
@@ -178,7 +246,7 @@ class StagedExecutor(ExecutorBase):
                         if indeg[dep] == 0:
                             nxt.append(dep)
             frontier = nxt
-        if seen != len(self.pending):
+        if seen != len(tasks):
             raise RuntimeError("cycle in task graph (impossible for "
                                "footprint-derived deps)")
         return waves
@@ -205,7 +273,8 @@ class StagedExecutor(ExecutorBase):
             ins.append(jnp.stack(
                 [td.args[pos].region.materialize() for td in group]))
         vfn = self._vjit.setdefault(fn, jax.jit(jax.vmap(fn)))
-        result = vfn(*ins)
+        with suspend_runtime_scope():    # tracing runs fn on this thread
+            result = vfn(*ins)
         n_out = len(group[0].outputs)
         if n_out == 1:
             result = (result,)
@@ -213,10 +282,10 @@ class StagedExecutor(ExecutorBase):
         for i, td in enumerate(group):
             for mode, stacked in zip(td.outputs, result):
                 mode.region.store(stacked[i])
+            td.output_values = tuple(stacked[i] for stacked in result)
 
-    def barrier(self) -> None:
-        waves = self._wavefronts()
-        for wave in waves:
+    def _run_waves(self, tasks: list[TaskDescriptor]) -> None:
+        for wave in self._wavefronts(tasks):
             self.waves_run += 1
             groups: dict = defaultdict(list)
             for td in wave:
@@ -226,7 +295,19 @@ class StagedExecutor(ExecutorBase):
             for td in wave:
                 self.scheduler._collect(td)
         self.scheduler.release_all()
+
+    def barrier(self) -> None:
+        self._run_waves(self.pending)
         self.pending.clear()
+
+    def wait_for(self, tds) -> None:
+        """Stage and dispatch *only* the dependence cone of ``tds``; every
+        pending task outside the cone stays pending for a later wave."""
+        cone = dependence_cone(tds)
+        if not cone:
+            return
+        self._run_waves([td for td in self.pending if td in cone])
+        self.pending = [td for td in self.pending if td not in cone]
 
     def reclaim(self) -> None:
         self.barrier()
@@ -235,9 +316,11 @@ class StagedExecutor(ExecutorBase):
 def _run_one(td: TaskDescriptor, jfn: Callable) -> None:
     td.state = TaskState.RUNNING
     in_vals = [a.region.materialize() for a in td.args if a.READS]
-    result = jfn(*in_vals)
+    with suspend_runtime_scope():        # tracing runs fn on this thread
+        result = jfn(*in_vals)
     outs = td.outputs
     if len(outs) == 1:
         result = (result,)
     for mode, value in zip(outs, result):
         mode.region.store(value)
+    td.output_values = tuple(result)

@@ -39,11 +39,17 @@ class TaskDescriptor:
     # dependence bookkeeping
     deps_remaining: int = 0
     dependents: list["TaskDescriptor"] = field(default_factory=list)
+    preds: tuple["TaskDescriptor", ...] = ()   # discovered at initiation
     state: TaskState = TaskState.WAITING
     worker: int | None = None
     # instrumentation (used by tests, the DES and the benchmarks)
     spawn_order: int = 0
     exec_order: int | None = None
+    # outputs captured at execution (references, not copies — jax arrays
+    # are immutable), so a TaskFuture reads this task's values even after
+    # later writers overwrite the region; None until executed, and stays
+    # None under the timing-only sim executor
+    output_values: tuple | None = None
 
     @property
     def is_complete(self) -> bool:
@@ -65,8 +71,10 @@ class TaskDescriptor:
         order, and must return one array per WRITES argument, in argument
         order (a single array if there is exactly one).
         """
+        from .api import suspend_runtime_scope
         in_vals = [a.region.materialize() for a in self.args if a.READS]
-        result = self.fn(*in_vals)
+        with suspend_runtime_scope():
+            result = self.fn(*in_vals)
         outs = self.outputs
         if len(outs) == 1:
             result = (result,)
@@ -78,6 +86,7 @@ class TaskDescriptor:
                 f"values for {len(outs)} OUT/INOUT arguments")
         for mode, value in zip(outs, result):
             mode.region.store(value)
+        self.output_values = tuple(result)
 
     def __repr__(self):
         return (f"<T{self.tid} {self.name or self.fn.__name__} "
@@ -128,6 +137,7 @@ class TaskGraph:
         self.n_unreleased += 1
         self.n_unexecuted += 1
         td.deps_remaining = len(deps)
+        td.preds = tuple(deps)
         for d in deps:
             d.dependents.append(td)
         if td.deps_remaining == 0:
@@ -149,11 +159,16 @@ class TaskGraph:
         newly_ready = []
         for dep in td.dependents:
             dep.deps_remaining -= 1
-            if dep.deps_remaining == 0:
+            if dep.deps_remaining == 0 and not dep.is_complete:
+                # the is_complete guard matters for staged execution,
+                # where a whole wave runs before any release: an already-
+                # executed dependent must not re-enter the ready queue
+                # (it would pin its descriptor + outputs there forever)
                 dep.state = TaskState.READY
                 self.waiting.discard(dep)
                 newly_ready.append(dep)
         td.dependents = []
+        td.preds = ()          # keep metadata O(live tasks), as in §3.6
         self.n_unreleased -= 1
         return newly_ready
 

@@ -1,32 +1,56 @@
-"""The BDDT-SCC front-end: spawn tasks with declared footprints, barrier.
+"""The BDDT-SCC front-end: declarative tasks, futures, region-scoped waits.
 
-Usage (OmpSs in JAX clothing)::
+The programming model (OmpSs in JAX clothing) — declare each kernel's
+footprint once with :func:`~repro.core.api.task`, then call it naturally
+inside a runtime scope::
 
-    from repro.core import TaskRuntime, In, Out, InOut
+    from repro.core import RuntimeConfig, TaskRuntime, task
 
-    rt = TaskRuntime(executor="host", n_workers=4)
-    A = rt.from_array(a, block_shape=(64, 64))
-    B = rt.from_array(b, block_shape=(64, 64))
-    C = rt.zeros((n, n), block_shape=(64, 64))
+    @task(inout="c", in_=("a", "b"))
+    def gemm(c, a, b):
+        return c + a @ b
 
-    for i in range(g):
-        for j in range(g):
-            for k in range(g):
-                rt.spawn(gemm_tile, InOut(C[i, j]), In(A[i, k]), In(B[k, j]))
-    rt.barrier()
+    with TaskRuntime(RuntimeConfig(executor="host", n_workers=4)) as rt:
+        A = rt.from_array(a, block_shape=(64, 64))
+        B = rt.from_array(b, block_shape=(64, 64))
+        C = rt.zeros((n, n), block_shape=(64, 64))
+        for i in range(g):
+            for j in range(g):
+                for k in range(g):
+                    f = gemm(C[i, j], A[i, k], B[k, j])  # -> TaskFuture
+        rt.wait_on(C[0, 0])      # taskwait on a region: forces only the
+        ...                      # tasks (and deps) touching that block
+        rt.barrier()             # global sync (also implied at scope exit)
     result = C.gather()
 
-Task functions receive one array per READS argument (in argument order) and
-return one array per WRITES argument (in argument order).
+Synchronization surface:
+
+* ``future.result()`` / ``future.wait()`` — force one task's dependence
+  cone only;
+* ``rt.wait_on(region, mode=...)`` — the paper's automatic sync
+  generalized past the global barrier: wait for the live tasks whose
+  footprints conflict with ``region`` under ``mode`` ("in" waits for
+  pending writers; "out"/"inout" also waits for readers);
+* ``rt.barrier()`` — full quiescence.
+
+The imperative form ``rt.spawn(fn, In(A[i, k]), InOut(C[i, j]))`` remains
+as a thin compatibility shim over the same task-initiation path (it now
+returns a :class:`~repro.core.api.TaskFuture`); new code should prefer
+``@task``.  Task functions receive one array per READS argument (in
+argument order) and return one array per WRITES argument (in argument
+order).
 """
 from __future__ import annotations
 
+import contextlib
 import time
 from typing import Callable, Sequence
 
+from .api import (RuntimeConfig, RuntimeStats, TaskFuture, _pop_runtime,
+                  _push_runtime)
 from .blocks import AccessMode, BlockArray, In, InOut, Out, Region
 from .deps import DependenceAnalyzer
-from .executor import (ExecutorBase, HostExecutor, SequentialExecutor,
+from .executor import (Executor, HostExecutor, SequentialExecutor,
                        StagedExecutor)
 from .graph import DescriptorPool, TaskDescriptor, TaskGraph
 from .mpb import MPBQueue
@@ -35,41 +59,49 @@ from .scheduler import MasterScheduler
 
 __all__ = ["TaskRuntime"]
 
-_EXECUTORS = ("sequential", "host", "staged")
-
 
 class TaskRuntime:
     """One master + N workers + the block store, wired per the paper."""
 
-    def __init__(self, executor: str = "host", n_workers: int = 4,
-                 mpb_slots: int = 16, pool_capacity: int = 4096,
-                 policy: str = "round_robin", placement: str = "striped",
-                 n_controllers: int = 4, group_waves: bool = True,
-                 seed: int = 0):
-        if executor not in _EXECUTORS:
-            raise ValueError(f"executor must be one of {_EXECUTORS}")
-        self.executor_kind = executor
-        self.placement = placement
-        self.n_controllers = n_controllers
+    def __init__(self, config: RuntimeConfig | None = None, **overrides):
+        if config is None:
+            config = RuntimeConfig(**overrides)
+        elif overrides:
+            config = config.replace(**overrides)
+        self.config = config.validate()
+        self.executor_kind = config.executor
+        self.placement = config.placement
+        self.n_controllers = config.n_controllers
         self.graph = TaskGraph()
-        self.pool = DescriptorPool(pool_capacity)
+        self.pool = DescriptorPool(config.pool_capacity)
         self.analyzer = DependenceAnalyzer()
-        self.queues = [MPBQueue(w, mpb_slots) for w in range(n_workers)]
+        self.queues = [MPBQueue(w, config.mpb_slots)
+                       for w in range(config.n_workers)]
         self.scheduler = MasterScheduler(self.queues, self.graph, self.pool,
-                                         self.analyzer, policy=policy,
-                                         seed=seed)
-        if executor == "sequential":
-            self._exec: ExecutorBase = SequentialExecutor(self.graph,
-                                                          self.scheduler)
-        elif executor == "host":
-            self._exec = HostExecutor(self.graph, self.scheduler, self.queues)
-        else:
-            self._exec = StagedExecutor(self.graph, self.scheduler,
-                                        group=group_waves)
+                                         self.analyzer, policy=config.policy,
+                                         seed=config.seed)
+        self._exec: Executor = self._make_executor(config)
         self._arrays: list[BlockArray] = []
         self._spawn_counter = 0
         self.spawn_time_s = 0.0
         self.barrier_time_s = 0.0
+        self.wait_time_s = 0.0
+        self.region_waits = 0
+        self.futures_resolved = 0
+
+    def _make_executor(self, config: RuntimeConfig) -> Executor:
+        if config.executor == "sequential":
+            return SequentialExecutor(self.graph, self.scheduler)
+        if config.executor == "host":
+            return HostExecutor(self.graph, self.scheduler, self.queues)
+        if config.executor == "sim":
+            from .sim import SimExecutor
+            return SimExecutor(self.graph, self.scheduler,
+                               n_workers=config.n_workers,
+                               mpb_slots=config.mpb_slots,
+                               cost_fn=config.sim_cost_fn)
+        return StagedExecutor(self.graph, self.scheduler,
+                              group=config.group_waves)
 
     # -- memory management (§3.2): the custom allocator --------------------------
     def _register(self, ba: BlockArray) -> BlockArray:
@@ -94,7 +126,11 @@ class TaskRuntime:
             shape, block_shape, fill, dtype or jnp.float32, name))
 
     # -- task initiation (§3.3) -----------------------------------------------------
-    def spawn(self, fn: Callable, *args: AccessMode, name: str = "") -> TaskDescriptor:
+    def spawn(self, fn: Callable, *args: AccessMode,
+              name: str = "") -> TaskFuture:
+        """Compatibility shim: imperative spawn with explicit In/Out/InOut
+        wrappers.  Prefer the ``@task`` decorator; this stays during the
+        migration window (see ROADMAP) and returns the same TaskFuture."""
         for a in args:
             if not isinstance(a, AccessMode):
                 raise TypeError(
@@ -112,9 +148,48 @@ class TaskRuntime:
         ready = self.graph.insert(td, deps)
         self._exec.on_spawn(td, ready)
         self.spawn_time_s += time.perf_counter() - t0
-        return td
+        return TaskFuture(self, td)
 
     # -- synchronization ---------------------------------------------------------------
+    def _wait_tasks(self, tds: Sequence[TaskDescriptor],
+                    kind: str = "future") -> None:
+        t0 = time.perf_counter()
+        self._exec.wait_for(tds)
+        self.wait_time_s += time.perf_counter() - t0
+        if kind == "future":
+            self.futures_resolved += len(tds)
+
+    def wait_on(self, *regions, mode: str = "in") -> None:
+        """Region-scoped taskwait (OmpSs ``taskwait on(...)``).
+
+        Returns once every live task whose footprint conflicts with
+        ``regions`` under ``mode`` has completed — in-flight tasks with
+        disjoint footprints are *not* waited for.  ``mode="in"`` waits for
+        pending writers (the regions' values become readable);
+        ``mode="out"``/``"inout"`` additionally waits for pending readers
+        (the regions become safely overwritable)."""
+        blocks = []
+        for r in regions:
+            if isinstance(r, BlockArray):
+                r = r.whole
+            if isinstance(r, AccessMode):
+                raise TypeError("wait_on takes regions, not In/Out/InOut "
+                                "wrappers; pass e.g. A[i, j]")
+            if not isinstance(r, Region):
+                raise TypeError(f"wait_on expected a Region or BlockArray, "
+                                f"got {type(r).__name__}")
+            blocks.extend(r.block_ids)
+        targets = self.analyzer.tasks_touching(blocks, mode=mode)
+        self.region_waits += 1
+        if targets:
+            self._wait_tasks(sorted(targets, key=lambda t: t.spawn_order),
+                             kind="region")
+
+    def wait_all(self, futures: Sequence[TaskFuture]) -> list:
+        """Wait on several futures at once; returns their results."""
+        self._wait_tasks([f.descriptor for f in futures], kind="future")
+        return [f.result() for f in futures]
+
     def barrier(self) -> None:
         t0 = time.perf_counter()
         self._exec.barrier()
@@ -124,10 +199,24 @@ class TaskRuntime:
     def shutdown(self) -> None:
         self._exec.shutdown()
 
+    # -- the runtime scope --------------------------------------------------------------
+    @contextlib.contextmanager
+    def scope(self):
+        """Activate as the ambient runtime for ``@task`` calls *without*
+        taking ownership: no barrier or shutdown at exit.  Use ``with
+        rt:`` for the owning form (callers that create the runtime)."""
+        _push_runtime(self)
+        try:
+            yield self
+        finally:
+            _pop_runtime(self)
+
     def __enter__(self) -> "TaskRuntime":
+        _push_runtime(self)
         return self
 
     def __exit__(self, *exc) -> None:
+        _pop_runtime(self)
         try:
             if exc == (None, None, None):
                 self.barrier()
@@ -135,21 +224,26 @@ class TaskRuntime:
             self.shutdown()
 
     # -- instrumentation -----------------------------------------------------------------
-    def stats(self) -> dict:
-        s = {
-            "tasks_spawned": self._spawn_counter,
-            "tasks_scheduled": self.scheduler.tasks_scheduled,
-            "polling_rounds": self.scheduler.polling_rounds,
-            "blocks_walked": self.analyzer.blocks_walked,
-            "deps_found": self.analyzer.deps_found,
-            "spawn_time_s": self.spawn_time_s,
-            "barrier_time_s": self.barrier_time_s,
-            "mpb_full_rejections": sum(q.full_rejections for q in self.queues),
-        }
+    def stats(self) -> RuntimeStats:
+        s = RuntimeStats(
+            tasks_spawned=self._spawn_counter,
+            tasks_scheduled=self.scheduler.tasks_scheduled,
+            polling_rounds=self.scheduler.polling_rounds,
+            blocks_walked=self.analyzer.blocks_walked,
+            deps_found=self.analyzer.deps_found,
+            spawn_time_s=self.spawn_time_s,
+            barrier_time_s=self.barrier_time_s,
+            wait_time_s=self.wait_time_s,
+            region_waits=self.region_waits,
+            futures_resolved=self.futures_resolved,
+            mpb_full_rejections=sum(q.full_rejections for q in self.queues),
+        )
         if isinstance(self._exec, HostExecutor):
-            s["worker_busy_s"] = [w.busy_s for w in self._exec.workers]
-            s["worker_tasks"] = [w.tasks_run for w in self._exec.workers]
+            s.worker_busy_s = [w.busy_s for w in self._exec.workers]
+            s.worker_tasks = [w.tasks_run for w in self._exec.workers]
         if isinstance(self._exec, StagedExecutor):
-            s["waves"] = self._exec.waves_run
-            s["grouped_dispatches"] = self._exec.grouped_dispatches
+            s.waves = self._exec.waves_run
+            s.grouped_dispatches = self._exec.grouped_dispatches
+        if getattr(self._exec, "last_result", None) is not None:
+            s.predicted_total_s = self._exec.predicted_total_s
         return s

@@ -18,10 +18,14 @@ from __future__ import annotations
 import heapq
 from dataclasses import dataclass, field
 
+import numpy as np
+
 from .costmodel import (SCCParams, core_core_hops, core_mc_hops,
                         master_core_choice, worker_order)
+from .executor import ExecutorBase
 
-__all__ = ["SimTask", "SimResult", "simulate", "sequential_time"]
+__all__ = ["SimTask", "SimResult", "SimExecutor", "simulate",
+           "sequential_time"]
 
 
 @dataclass
@@ -69,6 +73,73 @@ class SimResult:
             "flush_s": sum(self.worker_flush_s),
             "idle_s": sum(self.worker_idle_s),
         }
+
+
+class SimExecutor(ExecutorBase):
+    """The DES behind the :class:`~repro.core.executor.Executor` protocol.
+
+    ``TaskRuntime(executor="sim")`` runs a *real task program* —
+    footprints, dependence analysis, descriptor pool and all — but
+    instead of executing task bodies, the barrier replays the accumulated
+    DAG through :func:`simulate` on the calibrated SCC cost model.  Task
+    outputs are **not** computed (timing-only); the predicted makespan
+    lands in ``RuntimeStats.predicted_total_s`` and the full
+    :class:`SimResult` in :attr:`last_result`.
+    """
+
+    def __init__(self, graph, scheduler, *, n_workers: int = 4,
+                 mpb_slots: int = 16, cost_fn=None,
+                 params: SCCParams | None = None):
+        self.graph = graph
+        self.scheduler = scheduler
+        self.n_workers = n_workers
+        self.mpb_slots = mpb_slots
+        self.cost_fn = cost_fn or self._footprint_cost
+        self.params = params or SCCParams()
+        self.pending = []
+        self.last_result: SimResult | None = None
+        # fragments compose sequentially (each sync point serializes the
+        # master), so the program's predicted makespan is their sum
+        self.predicted_total_s = 0.0
+
+    @staticmethod
+    def _footprint_cost(td) -> tuple[float, float]:
+        """Default per-task cost: bytes = the whole footprint, flops =
+        2 x elements touched (a BLAS-1-ish density; pass ``sim_cost_fn``
+        in RuntimeConfig for kernel-accurate numbers)."""
+        total_bytes = sum(m.region.nbytes for m in td.args)
+        elems = sum(int(np.prod(m.region.shape)) for m in td.args)
+        return 2.0 * elems, float(total_bytes)
+
+    def _to_sim(self, td, batch_tids: set[int]) -> SimTask:
+        flops, mem = self.cost_fn(td)
+        homes = set()
+        n_blocks = 0
+        for m in td.args:
+            n_blocks += len(m.region.block_ids)
+            for idx in m.region.tile_indices:
+                homes.add(m.region.array.home.get(idx, 0))
+        return SimTask(
+            tid=td.tid, flops=float(flops), mem_bytes=float(mem),
+            homes=tuple(sorted(homes)) or (0,),
+            deps=tuple(p.tid for p in td.preds if p.tid in batch_tids),
+            n_blocks=max(n_blocks, 1))
+
+    def on_spawn(self, td, ready: bool) -> None:
+        self.pending.append(td)
+
+    def barrier(self) -> None:
+        if not self.pending:
+            return
+        batch_tids = {td.tid for td in self.pending}
+        sim_tasks = [self._to_sim(td, batch_tids) for td in self.pending]
+        self.last_result = simulate(sim_tasks, self.n_workers, self.params,
+                                    mpb_slots=self.mpb_slots)
+        self.predicted_total_s += self.last_result.total_s
+        for td in self.pending:
+            self.scheduler._collect(td)
+        self.scheduler.release_all()
+        self.pending.clear()
 
 
 def sequential_time(tasks: list[SimTask], p: SCCParams,

@@ -1,0 +1,80 @@
+"""Forward-compatibility shims for older jax (this container ships 0.4.x).
+
+The model and launch layers are written against the current jax surface
+(``jax.shard_map``, ``jax.sharding.AxisType``, ``jax.make_mesh(...,
+axis_types=...)``, positional ``AbstractMesh(shape, names)``).  On a jax
+that predates those, installing the shims below keeps the same source
+running: the shard_map alias translates ``check_vma`` to the old
+``check_rep`` flag, ``AxisType`` becomes an inert enum, and the mesh
+constructors accept-and-drop ``axis_types``.  On a current jax every shim
+is a no-op, so this module is safe to import unconditionally.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+
+import jax
+
+_installed = False
+
+
+class _AxisType(enum.Enum):
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+def install() -> None:
+    global _installed
+    if _installed:
+        return
+    _installed = True
+
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = _AxisType
+
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        @functools.wraps(_shard_map)
+        def shard_map(f, /, *, mesh, in_specs, out_specs, check_vma=None,
+                      check_rep=None, **kw):
+            # honor either spelling; remaining kwargs are forwarded so
+            # unsupported ones fail loudly instead of being dropped
+            if check_vma is None:
+                check_vma = True if check_rep is None else check_rep
+            return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=check_vma,
+                              **kw)
+
+        jax.shard_map = shard_map
+
+    import inspect
+    if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        _make_mesh = jax.make_mesh
+
+        @functools.wraps(_make_mesh)
+        def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kw):
+            return _make_mesh(axis_shapes, axis_names, **kw)
+
+        jax.make_mesh = make_mesh
+
+    try:
+        params = inspect.signature(
+            jax.sharding.AbstractMesh.__init__).parameters
+    except (TypeError, ValueError):  # pragma: no cover
+        params = {}
+    if "axis_names" not in params and "shape_tuple" in params:
+        _AbstractMesh = jax.sharding.AbstractMesh
+
+        class AbstractMesh(_AbstractMesh):
+            """Accepts the modern ``AbstractMesh(shape, names)`` call."""
+
+            def __init__(self, axis_shapes, axis_names=None, *,
+                         axis_types=None):
+                if axis_names is not None:
+                    axis_shapes = tuple(zip(axis_names, axis_shapes))
+                super().__init__(tuple(axis_shapes))
+
+        jax.sharding.AbstractMesh = AbstractMesh

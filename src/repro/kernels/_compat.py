@@ -1,0 +1,18 @@
+"""Pallas-TPU API drift shims.
+
+``pltpu.CompilerParams`` was ``pltpu.TPUCompilerParams`` on older jax;
+kernels route through :func:`tpu_compiler_params` so the same source
+lowers on both.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_CP = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams", None)
+
+
+def tpu_compiler_params(**kwargs):
+    if _CP is None:  # pragma: no cover - ancient pallas
+        return None
+    return _CP(**kwargs)

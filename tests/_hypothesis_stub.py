@@ -1,0 +1,85 @@
+"""Minimal stand-in for ``hypothesis`` when it isn't installed.
+
+Implements just the surface this suite uses — ``given``/``settings`` and
+the ``integers``/``floats``/``tuples``/``lists``/``sampled_from``
+strategies — as a deterministic seeded-random example generator.  The
+real hypothesis is preferred whenever importable (see ``conftest.py``);
+this keeps the property tests running in hermetic containers without
+turning them into no-ops.
+"""
+from __future__ import annotations
+
+import random
+import sys
+import types
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def floats(min_value, max_value):
+    return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+
+def tuples(*strategies):
+    return _Strategy(lambda r: tuple(s.draw(r) for s in strategies))
+
+
+def lists(elements, min_size=0, max_size=None):
+    hi = max_size if max_size is not None else min_size + 10
+    return _Strategy(
+        lambda r: [elements.draw(r) for _ in range(r.randint(min_size, hi))])
+
+
+def sampled_from(options):
+    options = list(options)
+    return _Strategy(lambda r: r.choice(options))
+
+
+_DEFAULT_EXAMPLES = 20
+
+
+def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategy_kw):
+    def deco(fn):
+        # NOT functools.wraps: pytest must not see the strategy params in
+        # the signature, or it would treat them as fixtures
+        def run(*args, **kw):
+            n = getattr(run, "_stub_max_examples", _DEFAULT_EXAMPLES)
+            rng = random.Random(1234)
+            for _ in range(n):
+                drawn = {k: s.draw(rng) for k, s in strategy_kw.items()}
+                fn(*args, **kw, **drawn)
+        run.__name__ = fn.__name__
+        run.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+        run.__doc__ = fn.__doc__
+        return run
+    return deco
+
+
+def install() -> None:
+    """Register this stub as ``hypothesis`` + ``hypothesis.strategies``."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "tuples", "lists", "sampled_from"):
+        setattr(st, name, globals()[name])
+    mod.strategies = st
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st

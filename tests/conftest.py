@@ -1,0 +1,11 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:                      # hermetic container: use the stub
+    import _hypothesis_stub
+    _hypothesis_stub.install()

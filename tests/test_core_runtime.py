@@ -3,13 +3,16 @@
 The central property is *serial elision*: for any task program, executing
 through the dynamic host runtime or the staged wavefront runtime produces
 bit-identical results to running the tasks sequentially in program order.
+The imperative ``rt.spawn(fn, In(...), ...)`` form used throughout is the
+compatibility shim over the ``@task`` front-end (covered in
+``test_task_api.py``); both drive the same task-initiation path.
 """
 import numpy as np
 import pytest
 import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st
 
-from repro.core import TaskRuntime, In, InOut, Out
+from repro.core import TaskRuntime, In, InOut, Out, task
 from repro.core.blocks import BlockArray
 from repro.core.graph import DescriptorPool, TaskState
 from repro.core.mpb import MPBQueue, SlotState
@@ -244,28 +247,29 @@ def test_execution_respects_dependences(ops):
 
 
 # ---------------------------------------------------------------------------
-# scheduling policies all produce correct results
+# scheduling policies all produce correct results (new @task front-end)
+@task(inout="c", in_=("x", "y"))
+def _gemm_task(c, x, y):
+    return c + x @ y
+
+
 @pytest.mark.parametrize("policy", ["round_robin", "locality", "random"])
 def test_policies(policy):
     rng = np.random.default_rng(1)
     a = rng.standard_normal((64, 64), dtype=np.float32)
     b = rng.standard_normal((64, 64), dtype=np.float32)
 
-    def gemm(c, x, y):
-        return c + x @ y
-
-    rt = TaskRuntime(executor="host", n_workers=3, mpb_slots=2,
-                     policy=policy)
-    A = rt.from_array(a, (16, 16))
-    B = rt.from_array(b, (16, 16))
-    C = rt.zeros((64, 64), (16, 16))
-    g = 4
-    for i in range(g):
-        for j in range(g):
-            for k in range(g):
-                rt.spawn(gemm, InOut(C[i, j]), In(A[i, k]), In(B[k, j]))
-    rt.barrier()
-    rt.shutdown()
+    with TaskRuntime(executor="host", n_workers=3, mpb_slots=2,
+                     policy=policy) as rt:
+        A = rt.from_array(a, (16, 16))
+        B = rt.from_array(b, (16, 16))
+        C = rt.zeros((64, 64), (16, 16))
+        g = 4
+        for i in range(g):
+            for j in range(g):
+                for k in range(g):
+                    _gemm_task(C[i, j], A[i, k], B[k, j])
+        rt.barrier()
     np.testing.assert_allclose(np.asarray(C.gather()), a @ b,
                                rtol=2e-4, atol=2e-4)
 

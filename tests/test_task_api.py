@@ -1,0 +1,469 @@
+"""The OmpSs-style front-end: @task footprint binding, futures forcing
+only their dependence cone, region-scoped waits vs concurrent writers,
+and the InOut/WAR dependence edge cases the decorator leans on."""
+import threading
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import (In, InOut, Out, RuntimeConfig, RuntimeStats,
+                        TaskFuture, TaskRuntime, current_runtime, task)
+from repro.core.executor import dependence_cone
+
+
+@task(inout="x")
+def _bump(x):
+    return x + 1.0
+
+
+@task(in_="a", out="b")
+def _copy2x(a, b=None):
+    return a * 2.0
+
+
+@task(inout="c", in_=("a", "b"))
+def _gemm(c, a, b):
+    return c + a @ b
+
+
+# ---------------------------------------------------------------------------
+class TestTaskDecorator:
+    def test_footprint_binding_order_and_modes(self):
+        with TaskRuntime(executor="staged") as rt:
+            A = rt.zeros((4, 4), (4, 4))
+            B = rt.zeros((4, 4), (4, 4))
+            C = rt.zeros((4, 4), (4, 4))
+            f = _gemm(C[0, 0], A[0, 0], B[0, 0])
+            td = f.descriptor
+            # args in parameter order with the declared modes
+            assert [type(m).__name__ for m in td.args] == \
+                ["InOut", "In", "In"]
+            assert td.args[0].region.array is C
+            assert td.args[1].region.array is A
+            assert td.args[2].region.array is B
+
+    def test_kwargs_and_blockarray_whole(self):
+        with TaskRuntime(executor="staged") as rt:
+            A = rt.full((4, 4), (4, 4), 2.0)
+            B = rt.zeros((4, 4), (4, 4))
+            f = _copy2x(b=B, a=A)       # kwargs + whole-array regions
+            np.testing.assert_allclose(np.asarray(f.result()), 4.0)
+
+    def test_eager_outside_scope(self):
+        assert current_runtime() is None
+        out = _copy2x(jnp.ones((2, 2)))     # plain array -> runs eagerly
+        assert float(out[0, 0]) == 2.0
+
+    def test_region_args_without_scope_is_pointed_error(self):
+        rt = TaskRuntime(executor="staged")    # no `with rt:` (old idiom)
+        A = rt.zeros((4, 4), (4, 4))
+        with pytest.raises(RuntimeError, match="no active runtime scope"):
+            _bump(A[0, 0])
+
+    def test_staged_release_does_not_leak_into_ready_queue(self):
+        """A dependent that already executed in a later wave must not
+        re-enter the ready queue at release (it would pin its descriptor
+        and captured outputs forever)."""
+        with TaskRuntime(executor="staged") as rt:
+            A = rt.zeros((4, 4), (4, 4))
+            for _ in range(50):                 # one 50-deep chain
+                _bump(A[0, 0])
+            rt.barrier()
+            assert not rt.graph.ready, \
+                f"{len(rt.graph.ready)} released descriptors leaked"
+            np.testing.assert_allclose(
+                np.asarray(A[0, 0].materialize()), 50.0)
+
+    @pytest.mark.parametrize("kind", ["sequential", "host", "staged"])
+    def test_task_bodies_run_eagerly_in_all_executors(self, kind):
+        """A task body calling another @task function must not spawn
+        recursively: worker threads see no ambient scope, and the
+        master-thread executors (sequential/staged) mask it while the
+        body runs — same program, same behavior, every executor."""
+        seen = {}
+
+        @task(inout="x")
+        def outer(x):
+            seen["inner"] = current_runtime()
+            return _bump(x)          # nested call: must run eagerly
+
+        with TaskRuntime(executor=kind, n_workers=2) as rt:
+            A = rt.zeros((4, 4), (4, 4))
+            out = outer(A[0, 0]).result()
+        assert seen["inner"] is None
+        np.testing.assert_allclose(np.asarray(out), 1.0)
+
+    def test_declaration_errors(self):
+        with pytest.raises(ValueError, match="more than one footprint"):
+            task(in_="a", inout="a")(lambda a: a)
+        with pytest.raises(ValueError, match="no parameter named"):
+            task(inout="zz")(lambda a: a)
+        with pytest.raises(ValueError, match="needs a footprint"):
+            task(inout="a")(lambda a, b: a)
+        with pytest.raises(ValueError, match="out/inout"):
+            task(in_="a")(lambda a: a)
+        with pytest.raises(ValueError, match="must come first"):
+            task(inout="b")(lambda a=1, b=None: a)
+        with pytest.raises(ValueError, match="must come first"):
+            # out-only param ahead of an in_ param would mis-bind
+            task(out="dst", in_="src")(lambda dst, src: src)
+        with pytest.raises(ValueError, match="declare a default"):
+            # out-only params receive no value -> need a default
+            task(in_="a", out="b")(lambda a, b: a)
+        with pytest.raises(TypeError, match="footprint declarations"):
+            task(lambda a: a)
+
+    def test_spawn_site_errors(self):
+        with TaskRuntime(executor="staged") as rt:
+            A = rt.zeros((4, 4), (4, 4))
+            with pytest.raises(TypeError, match="already declares"):
+                _bump(InOut(A[0, 0]))
+            with pytest.raises(TypeError, match="expected a Region"):
+                _bump(np.ones((4, 4)))
+
+            @task(in_="a", out="b")
+            def cap(a, b=None, _k=3):
+                return a * _k
+            with pytest.raises(TypeError, match="closure captures"):
+                cap(A[0, 0], A[0, 0], 5)
+
+    def test_compat_spawn_shim_identical(self):
+        """Old imperative spawn and @task produce identical results."""
+        def gemm_raw(c, a, b):
+            return c + a @ b
+
+        rng = np.random.default_rng(0)
+        a = rng.standard_normal((8, 8), dtype=np.float32)
+        b = rng.standard_normal((8, 8), dtype=np.float32)
+        results = []
+        for use_decorator in (False, True):
+            with TaskRuntime(executor="staged") as rt:
+                A = rt.from_array(a, (4, 4))
+                B = rt.from_array(b, (4, 4))
+                C = rt.zeros((8, 8), (4, 4))
+                for i in range(2):
+                    for j in range(2):
+                        for k in range(2):
+                            if use_decorator:
+                                _gemm(C[i, j], A[i, k], B[k, j])
+                            else:
+                                f = rt.spawn(gemm_raw, InOut(C[i, j]),
+                                             In(A[i, k]), In(B[k, j]))
+                                assert isinstance(f, TaskFuture)
+                rt.barrier()
+                results.append(np.asarray(C.gather()))
+        np.testing.assert_array_equal(results[0], results[1])
+        np.testing.assert_allclose(results[1], a @ b, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+class TestFutures:
+    def test_result_forces_only_dependence_cone(self):
+        with TaskRuntime(executor="staged") as rt:
+            A = rt.zeros((4, 4), (4, 4))
+            B = rt.zeros((4, 4), (4, 4))
+            f1 = _bump(A[0, 0])
+            f2 = _bump(A[0, 0])          # depends on f1
+            g1 = _bump(B[0, 0])          # unrelated
+            assert not (f1.done() or f2.done() or g1.done())
+            out = f2.result()
+            assert f1.done() and f2.done()
+            assert not g1.done(), "unrelated task was forced"
+            np.testing.assert_allclose(np.asarray(out), 2.0)
+            # cone of f2 (already complete) is empty now
+            assert dependence_cone([f2.descriptor]) == set()
+        assert g1.done()                 # scope-exit barrier drained it
+
+    def test_result_values_multiple_outputs(self):
+        @task(in_="a", out=("lo", "hi"))
+        def split(a, lo=None, hi=None):
+            return a - 1.0, a + 1.0
+
+        with TaskRuntime(executor="staged") as rt:
+            A = rt.full((4, 4), (4, 4), 5.0)
+            L = rt.zeros((4, 4), (4, 4))
+            H = rt.zeros((4, 4), (4, 4))
+            lo, hi = split(A, L, H).result()
+            np.testing.assert_allclose(np.asarray(lo), 4.0)
+            np.testing.assert_allclose(np.asarray(hi), 6.0)
+
+    @pytest.mark.parametrize("kind", ["sequential", "host", "staged"])
+    def test_future_done_and_result_all_executors(self, kind):
+        with TaskRuntime(executor=kind, n_workers=2) as rt:
+            A = rt.zeros((4, 4), (4, 4))
+            f = _bump(A[0, 0])
+            np.testing.assert_allclose(np.asarray(f.result()), 1.0)
+            assert f.done()
+
+    @pytest.mark.parametrize("kind", ["sequential", "host", "staged"])
+    def test_result_is_task_output_not_current_memory(self, kind):
+        """result() returns the value the task itself produced — the
+        serial-elision invariant holds even when a later writer has
+        already overwritten the region."""
+        with TaskRuntime(executor=kind, n_workers=2) as rt:
+            A = rt.zeros((4, 4), (4, 4))
+            f1 = _bump(A[0, 0])
+            f2 = _bump(A[0, 0])
+            rt.barrier()                 # both writers done; memory is 2.0
+            np.testing.assert_allclose(np.asarray(f1.result()), 1.0)
+            np.testing.assert_allclose(np.asarray(f2.result()), 2.0)
+            np.testing.assert_allclose(
+                np.asarray(A[0, 0].materialize()), 2.0)
+
+    def test_sim_result_refuses_loudly(self):
+        """The timing-only executor never computes values; result() must
+        say so instead of returning stale memory."""
+        with TaskRuntime(executor="sim") as rt:
+            A = rt.full((4, 4), (4, 4), 5.0)
+            f = _bump(A[0, 0])
+            with pytest.raises(RuntimeError, match="timing-only"):
+                f.result()
+            assert f.done()              # wait() itself is fine
+
+    def test_wait_all(self):
+        with TaskRuntime(executor="staged") as rt:
+            A = rt.zeros((8, 8), (4, 4))
+            futs = [_bump(A[i, j]) for i in range(2) for j in range(2)]
+            vals = rt.wait_all(futs)
+            assert all(f.done() for f in futs)
+            for v in vals:
+                np.testing.assert_allclose(np.asarray(v), 1.0)
+
+
+# ---------------------------------------------------------------------------
+class TestWaitOn:
+    def test_wait_on_region_vs_concurrent_writer(self):
+        """wait_on(region) must return while an unrelated in-flight
+        writer is still executing — deterministically arranged with an
+        event-gated task body."""
+        started = threading.Event()
+        release = threading.Event()
+
+        @task(inout="x")
+        def gated(x):
+            started.set()
+            assert release.wait(timeout=30)
+            return x + 1.0
+
+        @task(inout="x")
+        def double(x):
+            return x * 2.0
+
+        rt = TaskRuntime(executor="host", n_workers=2)
+        try:
+            with rt.scope():
+                A = rt.zeros((4, 4), (4, 4))
+                B = rt.full((4, 4), (4, 4), 3.0)
+                f_gated = gated(A[0, 0])          # occupies worker 0
+                assert started.wait(timeout=30)
+                f_fast = double(B[0, 0])          # worker 1
+                rt.wait_on(B[0, 0])
+                # region-scoped: B's writer done, A's writer still running
+                assert f_fast.done()
+                assert not f_gated.done(), \
+                    "wait_on(B) waited for an unrelated in-flight task"
+                np.testing.assert_allclose(
+                    np.asarray(B[0, 0].materialize()), 6.0)
+                release.set()
+                rt.barrier()
+                assert f_gated.done()
+        finally:
+            release.set()
+            rt.shutdown()
+
+    def test_wait_on_modes(self):
+        """mode="in" waits for writers only; mode="inout" also drains
+        readers (the WAR ordering a new writer would need)."""
+        with TaskRuntime(executor="staged") as rt:
+            A = rt.zeros((4, 4), (4, 4))
+            B = rt.zeros((8, 8), (4, 4))
+            w = _bump(A[0, 0])
+            r = _copy2x(A[0, 0], B[0, 0])      # reader of A after w
+            rt.wait_on(A[0, 0], mode="in")
+            assert w.done()
+            assert not r.done(), "mode='in' must not wait for readers"
+            rt.wait_on(A[0, 0], mode="inout")
+            assert r.done()
+
+    def test_wait_on_forces_transitive_cone(self):
+        with TaskRuntime(executor="staged") as rt:
+            A = rt.zeros((4, 4), (4, 4))
+            B = rt.zeros((4, 4), (4, 4))
+            C = rt.zeros((8, 8), (4, 4))
+            _bump(A[0, 0])                       # t1
+            _copy2x(A[0, 0], B[0, 0])            # t2: RAW on t1
+            unrelated = _bump(C[1, 1])
+            rt.wait_on(B[0, 0])
+            np.testing.assert_allclose(
+                np.asarray(B[0, 0].materialize()), 2.0)
+            assert not unrelated.done()
+
+    def test_wait_on_type_errors_and_empty(self):
+        with TaskRuntime(executor="staged") as rt:
+            A = rt.zeros((4, 4), (4, 4))
+            with pytest.raises(TypeError, match="regions"):
+                rt.wait_on(In(A[0, 0]))
+            with pytest.raises(ValueError, match="mode"):
+                rt.wait_on(A[0, 0], mode="rw")
+            rt.wait_on(A[0, 0])      # no live tasks: returns immediately
+            assert rt.stats().region_waits == 1
+
+
+# ---------------------------------------------------------------------------
+class TestDependenceEdgeCases:
+    def _edges(self, rt):
+        edges = []
+        orig = rt.analyzer.analyze
+
+        def wrapped(td):
+            deps = orig(td)
+            edges.extend((d, td) for d in deps)
+            return deps
+
+        rt.analyzer.analyze = wrapped
+        return edges
+
+    def test_inout_no_self_dependency(self):
+        with TaskRuntime(executor="staged") as rt:
+            A = rt.zeros((4, 4), (4, 4))
+            f = _bump(A[0, 0])
+            assert f.descriptor not in f.descriptor.preds
+            g = _bump(A[0, 0])
+            assert g.descriptor.preds == (f.descriptor,)
+
+    def test_repeated_region_in_one_footprint(self):
+        """In(A[0,0]) + Out(A[0,0]) in one task == InOut: no self-dep,
+        and later tasks order after it."""
+        def through(a):
+            return a + 5.0
+
+        with TaskRuntime(executor="staged") as rt:
+            A = rt.zeros((4, 4), (4, 4))
+            f = rt.spawn(through, In(A[0, 0]), Out(A[0, 0]))
+            assert f.descriptor.preds == ()
+            g = _bump(A[0, 0])
+            assert g.descriptor.preds == (f.descriptor,)
+            rt.barrier()
+            np.testing.assert_allclose(
+                np.asarray(A[0, 0].materialize()), 6.0)
+
+    def test_war_readers_cleared_by_writer(self):
+        """A write resets the reader set: the *second* writer must order
+        after readers-since-the-last-write only, not ancient readers."""
+        with TaskRuntime(executor="staged") as rt:
+            A = rt.zeros((4, 4), (4, 4))
+            B = rt.zeros((8, 8), (4, 4))
+            edges = self._edges(rt)
+            r1 = _copy2x(A[0, 0], B[0, 0])       # reader before w1
+            w1 = _bump(A[0, 0])                  # WAR on r1
+            r2 = _copy2x(A[0, 0], B[1, 1])       # reader after w1
+            w2 = _bump(A[0, 0])                  # WAR on r2, WAW on w1
+            pairs = {(d.tid, t.tid) for d, t in edges}
+            assert (r1.tid, w1.tid) in pairs
+            assert (w1.tid, w2.tid) in pairs
+            assert (r2.tid, w2.tid) in pairs
+            assert (r1.tid, w2.tid) not in pairs, \
+                "stale reader survived a write"
+            rt.barrier()
+
+    def test_deps_released_tasks_do_not_order(self):
+        """Completed+released tasks must not show up as dependences."""
+        with TaskRuntime(executor="staged") as rt:
+            A = rt.zeros((4, 4), (4, 4))
+            f = _bump(A[0, 0])
+            f.result()                            # executed + released
+            g = _bump(A[0, 0])
+            assert g.descriptor.preds == ()
+            rt.barrier()
+            np.testing.assert_allclose(
+                np.asarray(A[0, 0].materialize()), 2.0)
+
+
+# ---------------------------------------------------------------------------
+class TestRuntimeConfig:
+    def test_config_object_and_overrides(self):
+        cfg = RuntimeConfig(executor="staged", n_workers=7)
+        rt = TaskRuntime(cfg)
+        assert rt.config.n_workers == 7
+        rt2 = TaskRuntime(cfg, n_workers=2, policy="locality")
+        assert rt2.config.n_workers == 2
+        assert rt2.config.policy == "locality"
+        assert cfg.n_workers == 7           # frozen: overrides copy
+
+    def test_kwargs_compat(self):
+        rt = TaskRuntime(executor="sequential", pool_capacity=8)
+        assert rt.config.executor == "sequential"
+        assert rt.pool.capacity == 8
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="executor"):
+            TaskRuntime(executor="gpu")
+        with pytest.raises(ValueError, match="policy"):
+            TaskRuntime(policy="fifo")
+        with pytest.raises(ValueError, match="n_workers"):
+            TaskRuntime(n_workers=0)
+
+    def test_stats_typed(self):
+        with TaskRuntime(executor="staged") as rt:
+            A = rt.zeros((4, 4), (4, 4))
+            _bump(A[0, 0]).result()
+            s = rt.stats()
+        assert isinstance(s, RuntimeStats)
+        assert s.tasks_spawned == 1
+        assert s.futures_resolved == 1
+        assert s["deps_found"] == 0          # dict-style compat
+        assert s.get("nonexistent", 42) == 42
+        assert "tasks_spawned" in s.as_dict()
+        assert s.waves is not None           # staged executor section
+
+
+# ---------------------------------------------------------------------------
+class TestSimExecutor:
+    def test_sim_predicts_without_executing(self):
+        """executor="sim" shares the Executor protocol: same program,
+        timing-only DES playback — outputs are NOT computed."""
+        with TaskRuntime(executor="sim", n_workers=8) as rt:
+            A = rt.full((16, 16), (4, 4), 1.0)
+            for i in range(4):
+                for j in range(4):
+                    _bump(A[i, j])
+            rt.barrier()
+            s = rt.stats()
+            assert s.predicted_total_s is not None
+            assert s.predicted_total_s > 0
+            res = rt._exec.last_result
+            assert res.tasks == 16
+            assert sum(res.worker_tasks) == 16
+        # timing-only: data untouched
+        np.testing.assert_allclose(np.asarray(A.gather()), 1.0)
+
+    def test_sim_total_accumulates_across_syncs(self):
+        """Mid-program syncs split the simulation into fragments; the
+        reported makespan must cover the whole program, not the last
+        fragment."""
+        def run(syncs):
+            with TaskRuntime(executor="sim") as rt:
+                A = rt.full((16, 16), (4, 4), 1.0)
+                for i in range(4):
+                    for j in range(4):
+                        _bump(A[i, j])
+                    if syncs:
+                        rt.barrier()
+                rt.barrier()
+                return rt.stats().predicted_total_s
+        # fragmented prediction >= one-shot (syncs only serialize)
+        assert run(True) >= 0.95 * run(False)
+
+    def test_sim_speedup_shape(self):
+        """More simulated workers -> shorter predicted makespan for an
+        embarrassingly parallel batch."""
+        def predict(workers):
+            with TaskRuntime(executor="sim", n_workers=workers) as rt:
+                A = rt.full((64, 64), (4, 4), 1.0)
+                for i in range(16):
+                    for j in range(16):
+                        _bump(A[i, j])
+                rt.barrier()
+                return rt.stats().predicted_total_s
+        assert predict(16) < predict(1)
