@@ -4,14 +4,17 @@ the same dataflow with actual JAX kernels and verify numerics).
 
 Each app's kernels are declared once with ``@task`` footprints and called
 naturally inside the runtime scope — the OmpSs front-end the paper
-describes.  Sizes are parameters — tests use laptop-scale instances; the
-DES workloads carry the paper's §4.2 sizes.
+describes.  Index-parameterized kernels (fft's tile transpose, jacobi's
+halo stencil) take their offsets as ``firstprivate`` value parameters, so
+one shared function covers every tile and the staged executor batches a
+whole wavefront into a single vmap dispatch.  Sizes are parameters —
+tests use laptop-scale instances; the DES workloads carry the paper's
+§4.2 sizes.
 """
 from __future__ import annotations
 
-import functools
-
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from repro.core import TaskRuntime, task
@@ -121,25 +124,25 @@ def fft2d_app(rt: TaskRuntime, n: int = 256, row_block: int = 32,
             "paper's §4.2 uses 32-row blocks + 32x32 tiles"
         gt = n // tile
 
-        # one TaskFn per distinct (row offset, column) slice — tasks
-        # sharing a body group into one batched dispatch on the staged
-        # executor instead of jit-compiling per tile
-        @functools.lru_cache(maxsize=None)
-        def transpose_task(r0, c0):
-            @task(in_=("re_block", "im_block"), out=("re_t", "im_t"))
-            def transpose_tile(re_block, im_block, re_t=None, im_t=None):
-                re = re_block[r0:r0 + tile, c0:c0 + tile]
-                im = im_block[r0:r0 + tile, c0:c0 + tile]
-                return re.T, im.T
-            return transpose_tile
+        # one shared TaskFn for every tile: the (row, col) offsets are
+        # firstprivate values carried in the descriptor, so a wavefront
+        # of transpose tasks shares one batched vmap dispatch on the
+        # staged executor instead of jit-compiling per tile
+        @task(in_=("re_block", "im_block"), out=("re_t", "im_t"),
+              firstprivate=("r0", "c0"))
+        def transpose_tile(re_block, im_block, r0, c0,
+                           re_t=None, im_t=None):
+            re = jax.lax.dynamic_slice(re_block, (r0, c0), (tile, tile))
+            im = jax.lax.dynamic_slice(im_block, (r0, c0), (tile, tile))
+            return re.T, im.T
 
         for i in range(gt):
             for j in range(gt):
                 # source tile (i, j) lives in row-block i*tile//row_block
                 rb = (i * tile) // row_block
                 r0 = i * tile - rb * row_block
-                transpose_task(r0, j * tile)(Re1[rb, 0], Im1[rb, 0],
-                                             ReT[j, i], ImT[j, i])
+                transpose_tile(Re1[rb, 0], Im1[rb, 0], r0, j * tile,
+                               ReT[j, i], ImT[j, i])
         for r in range(g):
             # row r of the transposed matrix spans tile-rows of ReT
             t0 = (r * row_block) // tile
@@ -166,16 +169,14 @@ def jacobi_app(rt: TaskRuntime, n: int = 256, tile: int = 64,
         bufs = [rt.from_array(x0, (tile, tile), name="J0"),
                 rt.zeros((n, n), (tile, tile), name="J1")]
 
-        # the body depends only on the tile's offset inside its halo
-        # (<= 4 distinct fns), so identical-shape tasks share one TaskFn
-        # and batch on the staged executor
-        @functools.lru_cache(maxsize=None)
-        def stencil_task(r0, c0):
-            @task(in_="halo", out="dest")
-            def stencil(halo, dest=None):
-                full = jac_ref.jacobi_step(halo)
-                return full[r0:r0 + tile, c0:c0 + tile]
-            return stencil
+        # one shared TaskFn: the tile's offset inside its halo is a
+        # firstprivate value, so tasks group by halo *shape* only
+        # (corner/edge/interior) and each group batches into one vmap
+        # dispatch on the staged executor
+        @task(in_="halo", out="dest", firstprivate=("r0", "c0"))
+        def stencil(halo, r0, c0, dest=None):
+            full = jac_ref.jacobi_step(halo)
+            return jax.lax.dynamic_slice(full, (r0, c0), (tile, tile))
 
         for it in range(iters):
             s, d = bufs[it % 2], bufs[(it + 1) % 2]
@@ -183,8 +184,8 @@ def jacobi_app(rt: TaskRuntime, n: int = 256, tile: int = 64,
                 for j in range(g):
                     i0, i1 = max(i - 1, 0), min(i + 2, g)
                     j0, j1 = max(j - 1, 0), min(j + 2, g)
-                    stencil_task((i - i0) * tile, (j - j0) * tile)(
-                        s[i0:i1, j0:j1], d[i, j])
+                    stencil(s[i0:i1, j0:j1], (i - i0) * tile,
+                            (j - j0) * tile, d[i, j])
         rt.barrier()
     want = np.asarray(jac_ref.jacobi(jnp.asarray(x0), iters=iters))
     got = np.asarray(bufs[iters % 2].gather())

@@ -1,5 +1,5 @@
 """The declarative OmpSs-style front-end: ``@task`` footprint decorators,
-task futures, and runtime configuration.
+firstprivate value parameters, task futures, and runtime configuration.
 
 The paper's programming model is a pragma on the *function*: each argument
 is annotated ``in`` / ``out`` / ``inout`` once, and every call site spawns
@@ -23,6 +23,22 @@ is that front-end in Python::
         rt.wait_on(C[0, 0])        # region-scoped taskwait (§3.3 sync)
         ...                        # exit barrier drains the rest
 
+Scalar parameters — tile offsets, iteration indices, coefficients — are
+declared ``firstprivate`` (OmpSs's by-value capture) and bound at the spawn
+site like any other argument; the value is copied into the task descriptor,
+never synchronized on::
+
+    @task(in_="halo", out="dest", firstprivate=("r0", "c0"))
+    def stencil(halo, r0, c0, dest=None):
+        return jax.lax.dynamic_slice(step(halo), (r0, c0), (T, T))
+
+    stencil(S[i0:i1, j0:j1], r0, c0, D[i, j])   # r0/c0 ride in the task
+
+Because the function object is shared across spawn sites (no per-value
+closures), the staged executor batches same-shape instances of a wavefront
+into one ``jit(vmap(fn))`` dispatch, stacking the firstprivate values as
+extra vmap operands.
+
 Calling a decorated function *outside* a runtime scope (or from a worker
 thread) with plain arrays runs it eagerly — the decorated function is its
 own serial-elision reference.
@@ -41,6 +57,9 @@ import inspect
 import threading
 from dataclasses import dataclass
 from typing import Callable
+
+import jax
+import numpy as np
 
 from .blocks import AccessMode, BlockArray, In, InOut, Out, Region
 from .graph import TaskDescriptor
@@ -122,8 +141,10 @@ class RuntimeConfig:
     * ``placement`` / ``n_controllers`` — block -> memory-controller map.
     * ``group_waves`` — staged executor: fuse identical tile tasks of a
       wavefront into one batched dispatch.
-    * ``sim_cost_fn`` — "sim" executor: ``td -> (flops, bytes)``; defaults
-      to a footprint-derived estimate.
+    * ``sim_cost_fn`` — "sim" executor: ``td -> (flops, bytes)``; the
+      descriptor carries the task's footprint *and* its firstprivate
+      ``values``, so costs may depend on index parameters.  Defaults to a
+      footprint-derived estimate.
     """
     executor: str = "host"
     n_workers: int = 4
@@ -281,6 +302,16 @@ def _names(arg) -> tuple[str, ...]:
     return tuple(arg)
 
 
+def _is_numeric_value(v) -> bool:
+    """True for the by-value types every executor accepts: Python/NumPy/JAX
+    numeric scalars and arrays (bool, int, uint, float, complex kinds)."""
+    if isinstance(v, (bool, int, float, complex)):
+        return True
+    if isinstance(v, (np.ndarray, np.generic, jax.Array)):
+        return np.dtype(v.dtype).kind in "biufc"
+    return False
+
+
 def as_region(value, param: str) -> Region:
     if isinstance(value, Region):
         return value
@@ -296,9 +327,16 @@ def as_region(value, param: str) -> Region:
 
 
 class TaskFn:
-    """A function with a declared footprint; calling it spawns a task."""
+    """A function with a declared footprint; calling it spawns a task.
 
-    def __init__(self, fn: Callable, in_=(), out=(), inout=()):
+    Footprint parameters (``in_``/``out``/``inout``) receive block regions
+    at spawn sites and are what the runtime synchronizes on; firstprivate
+    parameters receive plain values that are copied into the descriptor
+    (OmpSs by-value capture) and handed to the body at execution.
+    """
+
+    def __init__(self, fn: Callable, in_=(), out=(), inout=(),
+                 firstprivate=()):
         self.fn = fn
         self.__name__ = fn.__name__
         self.__doc__ = fn.__doc__
@@ -317,24 +355,41 @@ class TaskFn:
                         f"@task({fn.__name__}): no parameter named {n!r} "
                         f"(has {tuple(self._sig.parameters)})")
                 modes[n] = mode
-        # params without a footprint must carry defaults (closure-capture
-        # idiom, e.g. ``def f(x, dest=None, _i=i)``); they are never bound
-        # at spawn sites
+        fp_set: set[str] = set()
+        for n in _names(firstprivate):
+            if n in modes or n in fp_set:
+                raise ValueError(
+                    f"@task({fn.__name__}): parameter {n!r} declared "
+                    "both firstprivate and in a footprint list"
+                    if n in modes else
+                    f"@task({fn.__name__}): firstprivate parameter {n!r} "
+                    "declared twice")
+            if n not in self._sig.parameters:
+                raise ValueError(
+                    f"@task({fn.__name__}): no parameter named {n!r} "
+                    f"(has {tuple(self._sig.parameters)})")
+            fp_set.add(n)
+        # params without a footprint or firstprivate declaration must
+        # carry defaults (closure-capture idiom, e.g. ``def f(x,
+        # dest=None, _i=i)``); they are never bound at spawn sites
         missing = [n for n, p in self._sig.parameters.items()
-                   if n not in modes and p.default is inspect.Parameter.empty]
+                   if n not in modes and n not in fp_set
+                   and p.default is inspect.Parameter.empty]
         if missing:
             raise ValueError(
                 f"@task({fn.__name__}): every required parameter needs a "
-                f"footprint (in_/out/inout); missing {missing}")
+                f"footprint (in_/out/inout) or a firstprivate "
+                f"declaration; missing {missing}")
         if not any(m.WRITES for m in modes.values()):
             raise ValueError(
                 f"@task({fn.__name__}): at least one out/inout parameter "
                 "is required (tasks communicate through their footprints)")
         # argument order == parameter order, the TaskDescriptor contract:
-        # at execution the runtime calls fn(*reads_values), so the READS
-        # params (in_/inout) must be exactly the leading positional
-        # params, and everything after them (out-only params, closure
-        # captures) must carry defaults since it receives no value
+        # at execution the runtime calls fn(*reads_values, *values), so
+        # the READS params (in_/inout) must be exactly the leading
+        # positional params, firstprivate params must directly follow
+        # them, and everything after (out-only params, closure captures)
+        # must carry defaults since it receives no value
         params = list(self._sig.parameters)
         reads = [n for n in params if n in modes and modes[n].READS]
         if params[:len(reads)] != reads:
@@ -342,13 +397,59 @@ class TaskFn:
                 f"@task({fn.__name__}): in_/inout parameters must come "
                 f"first in the signature (the task body receives their "
                 f"values positionally); got order {params}")
-        for n in params[len(reads):]:
+        fp = [n for n in params if n in fp_set]
+        if params[len(reads):len(reads) + len(fp)] != fp:
+            raise ValueError(
+                f"@task({fn.__name__}): firstprivate parameters must "
+                f"directly follow the in_/inout parameters (the task "
+                f"body receives their values positionally); got order "
+                f"{params}")
+        for n in params[len(reads) + len(fp):]:
             if self._sig.parameters[n].default is inspect.Parameter.empty:
                 raise ValueError(
                     f"@task({fn.__name__}): parameter {n!r} receives no "
-                    f"value at execution (it is not in_/inout) and must "
-                    f"declare a default, e.g. {n}=None")
+                    f"value at execution (it is not in_/inout/"
+                    f"firstprivate) and must declare a default, "
+                    f"e.g. {n}=None")
         self.modes = {n: modes[n] for n in params if n in modes}
+        self.firstprivate = tuple(fp)
+
+    def _bind_values(self, bound) -> tuple:
+        """The firstprivate values of one spawn, in parameter order."""
+        values = []
+        for n in self.firstprivate:
+            if n in bound.arguments:
+                v = bound.arguments[n]
+            else:
+                v = self._sig.parameters[n].default
+                if v is inspect.Parameter.empty:
+                    raise TypeError(
+                        f"{self.__name__}: firstprivate parameter {n!r} "
+                        f"needs a value at the call site (or a default "
+                        f"in the signature)")
+            if isinstance(v, (Region, BlockArray, AccessMode)):
+                raise TypeError(
+                    f"{self.__name__}: firstprivate parameter {n!r} is "
+                    f"passed by value, got {type(v).__name__} — block "
+                    "regions belong in in_/out/inout footprints")
+            if not _is_numeric_value(v):
+                # reject at the spawn site, uniformly across executors —
+                # a non-numeric value would only blow up later inside the
+                # staged executor's jit/vmap tracing, far from this call
+                raise TypeError(
+                    f"{self.__name__}: firstprivate parameter {n!r} must "
+                    f"be a numeric scalar or array (it is staged through "
+                    f"jit/vmap), got {type(v).__name__}")
+            if type(v) is int:
+                info = np.iinfo(jax.dtypes.canonicalize_dtype(np.int64))
+                if not info.min <= v <= info.max:
+                    raise TypeError(
+                        f"{self.__name__}: firstprivate parameter {n!r} "
+                        f"value {v} overflows the canonical JAX integer "
+                        f"dtype {np.dtype(info.dtype).name}; pass it as "
+                        f"an explicit-width array instead")
+            values.append(v)
+        return tuple(values)
 
     def __call__(self, *args, **kwargs):
         rt = current_runtime()
@@ -360,13 +461,14 @@ class TaskFn:
                     "active runtime scope — wrap the call in `with rt:` "
                     "(or `with rt.scope():`) to spawn it as a task")
             return self.fn(*args, **kwargs)      # eager / serial elision
-        bound = self._sig.bind(*args, **kwargs)
-        extra = [n for n in bound.arguments if n not in self.modes]
+        bound = self._sig.bind_partial(*args, **kwargs)
+        extra = [n for n in bound.arguments
+                 if n not in self.modes and n not in self.firstprivate]
         if extra:
             raise TypeError(
-                f"{self.__name__}: parameters without a footprint are "
-                f"closure captures and cannot be bound at a spawn site: "
-                f"{extra}")
+                f"{self.__name__}: parameters without a footprint or "
+                f"firstprivate declaration are closure captures and "
+                f"cannot be bound at a spawn site: {extra}")
         missing = [n for n in self.modes if n not in bound.arguments]
         if missing:
             raise TypeError(
@@ -375,7 +477,8 @@ class TaskFn:
         access = tuple(
             self.modes[name](as_region(bound.arguments[name], name))
             for name in self.modes)
-        return rt.spawn(self.fn, *access, name=self.__name__)
+        return rt._initiate(self.fn, access, name=self.__name__,
+                            values=self._bind_values(bound))
 
     def spawn_on(self, rt, *args, **kwargs) -> TaskFuture:
         """Spawn explicitly on ``rt`` (no ambient scope needed)."""
@@ -387,22 +490,39 @@ class TaskFn:
 
     def __repr__(self):
         ann = ", ".join(f"{n}:{m.__name__}" for n, m in self.modes.items())
+        if self.firstprivate:
+            ann += ", " + ", ".join(f"{n}:firstprivate"
+                                    for n in self.firstprivate)
         return f"<task {self.__name__}({ann})>"
 
 
-def task(fn: Callable | None = None, *, in_=(), out=(), inout=()):
+def task(fn: Callable | None = None, *, in_=(), out=(), inout=(),
+         firstprivate=()):
     """Declare a task function's footprint (OmpSs ``#pragma omp task``).
 
     ``in_`` / ``out`` / ``inout`` each name one parameter (a string) or
     several (an iterable).  Every parameter of the function must appear in
-    exactly one list; at call sites inside a ``with rt:`` scope each
+    exactly one list — or in ``firstprivate`` — or carry a default; at
+    call sites inside a ``with rt:`` scope each footprint parameter
     receives a block :class:`Region` (or a whole :class:`BlockArray`).
     The function body receives materialized arrays for its ``in_`` and
     ``inout`` parameters (in parameter order) and returns one array per
     ``out``/``inout`` parameter (in parameter order).
+
+    ``firstprivate`` names parameters passed *by value* at the spawn site
+    (scalars, index offsets, small arrays): the value is copied into the
+    task descriptor at initiation, never synchronized on, and handed to
+    the body positionally right after the ``in_``/``inout`` arrays.  A
+    firstprivate parameter may declare a default, used when the spawn
+    site omits it.  On the staged executor, same-function tasks of a
+    wavefront that differ only in firstprivate values batch into one
+    ``jit(vmap(fn))`` dispatch with the values stacked as vmap operands —
+    so the body must be vmap-traceable over them (index with
+    ``jax.lax.dynamic_slice``, not Python slicing).
     """
     def wrap(f):
-        return TaskFn(f, in_=in_, out=out, inout=inout)
+        return TaskFn(f, in_=in_, out=out, inout=inout,
+                      firstprivate=firstprivate)
     if fn is not None:                 # bare @task is an error we explain
         raise TypeError(
             "@task needs footprint declarations, e.g. "

@@ -21,9 +21,10 @@ from typing import Callable, Iterable, Protocol, Sequence, runtime_checkable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .api import suspend_runtime_scope
-from .graph import TaskDescriptor, TaskGraph, TaskState
+from .graph import TaskDescriptor, TaskGraph, TaskState, normalize_outputs
 from .mpb import MPBQueue
 from .scheduler import MasterScheduler
 
@@ -210,8 +211,11 @@ class StagedExecutor(ExecutorBase):
     Grouping: tasks in one wavefront with the same function and the same
     input/output signature are stacked and executed through one
     ``jit(vmap(fn))`` call — the TPU analogue of handing each worker its MPB
-    queue of identical tile tasks.  The stacked axis is the "worker" axis;
-    under ``shard_map`` on real hardware it shards over the mesh.
+    queue of identical tile tasks.  Firstprivate values are stacked as extra
+    vmap operands, so index-parameterized tile tasks (same function,
+    different offsets) share the dispatch too.  The stacked axis is the
+    "worker" axis; under ``shard_map`` on real hardware it shards over the
+    mesh.
     """
 
     def __init__(self, graph: TaskGraph, scheduler: MasterScheduler,
@@ -252,32 +256,53 @@ class StagedExecutor(ExecutorBase):
         return waves
 
     def _sig(self, td: TaskDescriptor):
+        """The grouping key: function identity plus the *structure* of the
+        footprint and the firstprivate values (shapes/dtypes, never the
+        values themselves) — tasks that differ only in region contents or
+        index values share one batched dispatch."""
         parts = [td.fn]
         for m in td.args:
             parts.append((type(m).__name__, m.region.shape,
                           str(m.region.array.dtype)))
+        for v in td.values:
+            # structure only, no device transfer on the dispatch critical
+            # path; the canonical dtype (what jnp.asarray will stage the
+            # value to) is the key, so a Python float and an np.float32
+            # from different spawn sites still share one dispatch
+            dt = jax.dtypes.canonicalize_dtype(np.result_type(v))
+            parts.append(("firstprivate", np.shape(v), str(dt)))
         return tuple(parts)
 
     def _run_group(self, group: list[TaskDescriptor]) -> None:
         fn = group[0].fn
         if len(group) == 1 or not self.group:
-            jfn = self._jit.setdefault(fn, jax.jit(fn))
+            jfn = self._jit.get(fn)
+            if jfn is None:
+                jfn = self._jit[fn] = jax.jit(fn)
             for td in group:
                 _run_one(td, jfn)
             return
-        # batched dispatch: stack each READS arg across the group
+        for td in group:
+            td.state = TaskState.RUNNING
+        # batched dispatch: stack each READS arg across the group, then
+        # the firstprivate values as extra vmap operands — same function,
+        # different index values, one compiled dispatch per wavefront
         ins = []
         for pos in range(len(group[0].args)):
             if not group[0].args[pos].READS:
                 continue
             ins.append(jnp.stack(
                 [td.args[pos].region.materialize() for td in group]))
-        vfn = self._vjit.setdefault(fn, jax.jit(jax.vmap(fn)))
+        for pos in range(len(group[0].values)):
+            ins.append(jnp.stack(
+                [jnp.asarray(td.values[pos]) for td in group]))
+        vfn = self._vjit.get(fn)
+        if vfn is None:
+            vfn = self._vjit[fn] = jax.jit(jax.vmap(fn))
         with suspend_runtime_scope():    # tracing runs fn on this thread
             result = vfn(*ins)
-        n_out = len(group[0].outputs)
-        if n_out == 1:
-            result = (result,)
+        result = normalize_outputs(result, len(group[0].outputs),
+                                   group[0].name or group[0].tid)
         self.grouped_dispatches += 1
         for i, td in enumerate(group):
             for mode, stacked in zip(td.outputs, result):
@@ -317,10 +342,9 @@ def _run_one(td: TaskDescriptor, jfn: Callable) -> None:
     td.state = TaskState.RUNNING
     in_vals = [a.region.materialize() for a in td.args if a.READS]
     with suspend_runtime_scope():        # tracing runs fn on this thread
-        result = jfn(*in_vals)
+        result = jfn(*in_vals, *td.values)
     outs = td.outputs
-    if len(outs) == 1:
-        result = (result,)
+    result = normalize_outputs(result, len(outs), td.name or td.tid)
     for mode, value in zip(outs, result):
         mode.region.store(value)
-    td.output_values = tuple(result)
+    td.output_values = result

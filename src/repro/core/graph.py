@@ -17,7 +17,23 @@ from typing import Any, Callable, Sequence
 
 from .blocks import AccessMode, In, InOut, Out
 
-__all__ = ["TaskState", "TaskDescriptor", "TaskGraph", "DescriptorPool"]
+__all__ = ["TaskState", "TaskDescriptor", "TaskGraph", "DescriptorPool",
+           "normalize_outputs"]
+
+
+def normalize_outputs(result, n_out: int, label) -> tuple:
+    """Normalize a task function's return value into one value per
+    OUT/INOUT argument, validating arity (the §3.5 execution contract,
+    shared by ``TaskDescriptor.run`` and both StagedExecutor paths)."""
+    if result is None:
+        result = ()
+    elif n_out == 1:
+        result = (result,)
+    if len(result) != n_out:
+        raise RuntimeError(
+            f"task {label}: fn returned {len(result)} values for "
+            f"{n_out} OUT/INOUT arguments")
+    return tuple(result)
 
 
 class TaskState(enum.Enum):
@@ -31,11 +47,13 @@ class TaskState(enum.Enum):
 @dataclass(eq=False)
 class TaskDescriptor:
     """What the master writes into a worker's MPB slot: the spawned function,
-    its arguments, and a representation of the footprint."""
+    its arguments, a representation of the footprint, and any firstprivate
+    values (OmpSs by-value parameters, copied in at initiation)."""
     tid: int
     fn: Callable
     args: tuple[AccessMode, ...]
     name: str = ""
+    values: tuple = ()                 # firstprivate, in parameter order
     # dependence bookkeeping
     deps_remaining: int = 0
     dependents: list["TaskDescriptor"] = field(default_factory=list)
@@ -68,25 +86,19 @@ class TaskDescriptor:
         inputs; store the returned values into the OUT/INOUT regions.
 
         The function receives one array per READS argument, in argument
-        order, and must return one array per WRITES argument, in argument
-        order (a single array if there is exactly one).
+        order, then the firstprivate values in parameter order, and must
+        return one array per WRITES argument, in argument order (a single
+        array if there is exactly one).
         """
         from .api import suspend_runtime_scope
         in_vals = [a.region.materialize() for a in self.args if a.READS]
         with suspend_runtime_scope():
-            result = self.fn(*in_vals)
+            result = self.fn(*in_vals, *self.values)
         outs = self.outputs
-        if len(outs) == 1:
-            result = (result,)
-        elif result is None:
-            result = ()
-        if len(result) != len(outs):
-            raise RuntimeError(
-                f"task {self.name or self.tid}: fn returned {len(result)} "
-                f"values for {len(outs)} OUT/INOUT arguments")
+        result = normalize_outputs(result, len(outs), self.name or self.tid)
         for mode, value in zip(outs, result):
             mode.region.store(value)
-        self.output_values = tuple(result)
+        self.output_values = result
 
     def __repr__(self):
         return (f"<T{self.tid} {self.name or self.fn.__name__} "
@@ -103,12 +115,13 @@ class DescriptorPool:
         self._live = 0
         self._tid = itertools.count()
 
-    def acquire(self, fn, args, name="") -> TaskDescriptor | None:
+    def acquire(self, fn, args, name="",
+                values: tuple = ()) -> TaskDescriptor | None:
         if self._live >= self.capacity:
             return None
         self._live += 1
         return TaskDescriptor(tid=next(self._tid), fn=fn, args=tuple(args),
-                              name=name)
+                              name=name, values=tuple(values))
 
     def release(self, td: TaskDescriptor) -> None:
         td.state = TaskState.RELEASED

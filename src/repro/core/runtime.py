@@ -6,9 +6,9 @@ inside a runtime scope::
 
     from repro.core import RuntimeConfig, TaskRuntime, task
 
-    @task(inout="c", in_=("a", "b"))
-    def gemm(c, a, b):
-        return c + a @ b
+    @task(inout="c", in_=("a", "b"), firstprivate="alpha")
+    def gemm(c, a, b, alpha=1.0):
+        return c + alpha * (a @ b)
 
     with TaskRuntime(RuntimeConfig(executor="host", n_workers=4)) as rt:
         A = rt.from_array(a, block_shape=(64, 64))
@@ -17,7 +17,9 @@ inside a runtime scope::
         for i in range(g):
             for j in range(g):
                 for k in range(g):
-                    f = gemm(C[i, j], A[i, k], B[k, j])  # -> TaskFuture
+                    # regions bind the footprint; alpha is firstprivate,
+                    # copied by value into the task descriptor
+                    f = gemm(C[i, j], A[i, k], B[k, j], 0.5)  # TaskFuture
         rt.wait_on(C[0, 0])      # taskwait on a region: forces only the
         ...                      # tasks (and deps) touching that block
         rt.barrier()             # global sync (also implied at scope exit)
@@ -34,16 +36,17 @@ Synchronization surface:
 * ``rt.barrier()`` — full quiescence.
 
 The imperative form ``rt.spawn(fn, In(A[i, k]), InOut(C[i, j]))`` remains
-as a thin compatibility shim over the same task-initiation path (it now
-returns a :class:`~repro.core.api.TaskFuture`); new code should prefer
-``@task``.  Task functions receive one array per READS argument (in
-argument order) and return one array per WRITES argument (in argument
-order).
+as a thin compatibility shim over the same task-initiation path but now
+emits a :class:`DeprecationWarning`; new code uses ``@task``.  Task
+functions receive one array per READS argument (in argument order), then
+their firstprivate values (in parameter order), and return one array per
+WRITES argument (in argument order).
 """
 from __future__ import annotations
 
 import contextlib
 import time
+import warnings
 from typing import Callable, Sequence
 
 from .api import (RuntimeConfig, RuntimeStats, TaskFuture, _pop_runtime,
@@ -126,22 +129,18 @@ class TaskRuntime:
             shape, block_shape, fill, dtype or jnp.float32, name))
 
     # -- task initiation (§3.3) -----------------------------------------------------
-    def spawn(self, fn: Callable, *args: AccessMode,
-              name: str = "") -> TaskFuture:
-        """Compatibility shim: imperative spawn with explicit In/Out/InOut
-        wrappers.  Prefer the ``@task`` decorator; this stays during the
-        migration window (see ROADMAP) and returns the same TaskFuture."""
-        for a in args:
-            if not isinstance(a, AccessMode):
-                raise TypeError(
-                    "spawn arguments must be In/Out/InOut(region); got "
-                    f"{type(a).__name__}")
+    def _initiate(self, fn: Callable, args: Sequence[AccessMode],
+                  name: str = "", values: tuple = ()) -> TaskFuture:
+        """The task-initiation path shared by ``@task`` spawn sites and the
+        deprecated imperative ``spawn`` shim: acquire a descriptor (blocking
+        on pool exhaustion), discover dependencies, hand to the executor.
+        ``values`` carries the firstprivate by-value parameters."""
         t0 = time.perf_counter()
-        td = self.pool.acquire(fn, args, name=name)
+        td = self.pool.acquire(fn, args, name=name, values=values)
         while td is None:
             # §3.3: no free descriptors -> master blocks until one recycles
             self._exec.reclaim()
-            td = self.pool.acquire(fn, args, name=name)
+            td = self.pool.acquire(fn, args, name=name, values=values)
         td.spawn_order = self._spawn_counter
         self._spawn_counter += 1
         deps = self.analyzer.analyze(td)
@@ -149,6 +148,24 @@ class TaskRuntime:
         self._exec.on_spawn(td, ready)
         self.spawn_time_s += time.perf_counter() - t0
         return TaskFuture(self, td)
+
+    def spawn(self, fn: Callable, *args: AccessMode, name: str = "",
+              values: tuple = ()) -> TaskFuture:
+        """Deprecated compatibility shim: imperative spawn with explicit
+        In/Out/InOut wrappers.  Declare footprints with the ``@task``
+        decorator instead; this form will be dropped once external callers
+        migrate (see ROADMAP) and returns the same TaskFuture."""
+        warnings.warn(
+            "rt.spawn(fn, In(...), ...) is deprecated: declare the "
+            "footprint once with @task(in_=..., out=..., inout=...) and "
+            "call the function inside the runtime scope",
+            DeprecationWarning, stacklevel=2)
+        for a in args:
+            if not isinstance(a, AccessMode):
+                raise TypeError(
+                    "spawn arguments must be In/Out/InOut(region); got "
+                    f"{type(a).__name__}")
+        return self._initiate(fn, args, name=name, values=tuple(values))
 
     # -- synchronization ---------------------------------------------------------------
     def _wait_tasks(self, tds: Sequence[TaskDescriptor],

@@ -106,7 +106,10 @@ class SimExecutor(ExecutorBase):
     def _footprint_cost(td) -> tuple[float, float]:
         """Default per-task cost: bytes = the whole footprint, flops =
         2 x elements touched (a BLAS-1-ish density; pass ``sim_cost_fn``
-        in RuntimeConfig for kernel-accurate numbers)."""
+        in RuntimeConfig for kernel-accurate numbers).  A custom cost_fn
+        receives the full descriptor — including ``td.values``, the
+        firstprivate parameters — so per-task costs can depend on index
+        values (e.g. trailing-submatrix size in a factorization)."""
         total_bytes = sum(m.region.nbytes for m in td.args)
         elems = sum(int(np.prod(m.region.shape)) for m in td.args)
         return 2.0 * elems, float(total_bytes)

@@ -3,9 +3,10 @@
 The central property is *serial elision*: for any task program, executing
 through the dynamic host runtime or the staged wavefront runtime produces
 bit-identical results to running the tasks sequentially in program order.
-The imperative ``rt.spawn(fn, In(...), ...)`` form used throughout is the
-compatibility shim over the ``@task`` front-end (covered in
-``test_task_api.py``); both drive the same task-initiation path.
+Task programs here are built on the declarative ``@task`` front-end
+(footprint-declared functions spawned inside a runtime scope); the
+deprecated imperative ``rt.spawn(fn, In(...), ...)`` shim keeps one
+warning-and-equivalence test below.
 """
 import numpy as np
 import pytest
@@ -19,21 +20,25 @@ from repro.core.mpb import MPBQueue, SlotState
 
 
 # ---------------------------------------------------------------------------
-# deterministic, order-sensitive task functions
+# deterministic, order-sensitive task functions (footprint-declared)
+@task(inout="prev", in_="x")
 def _acc(prev, x):
     return prev * jnp.float32(0.5) + x
 
 
-def _combine(a, b):
+@task(in_=("a", "b"), out="o")
+def _combine(a, b, o=None):
     return a - jnp.float32(2.0) * b
 
 
-def _scale(a):
+@task(in_="a", out="o")
+def _scale(a, o=None):
     return a * jnp.float32(1.25) + jnp.float32(1.0)
 
 
-def _fill7(_):
-    return jnp.full_like(_, 7.0)
+@task(inout="x")
+def _fill7(x):
+    return jnp.full_like(x, 7.0)
 
 
 # ---------------------------------------------------------------------------
@@ -69,7 +74,7 @@ class TestBlocks:
 # unit: the MPB SPSC protocol (§3.4-3.5)
 class TestMPB:
     def _td(self, pool, i=0):
-        return pool.acquire(_scale, (), name=f"t{i}")
+        return pool.acquire(_scale.fn, (), name=f"t{i}")
 
     def test_fill_reject_complete_reuse(self):
         pool = DescriptorPool(64)
@@ -121,42 +126,46 @@ class TestDependences:
     def test_raw(self):
         rt = self._rt()
         edges = self._edges(rt)
-        A = rt.zeros((4, 4), (4, 4))
-        t0 = rt.spawn(_fill7, InOut(A[0, 0]))
-        t1 = rt.spawn(_scale, In(A[0, 0]), Out(A[0, 0]))
-        assert (t0.tid, t1.tid) in edges
-        rt.barrier()
+        with rt.scope():
+            A = rt.zeros((4, 4), (4, 4))
+            t0 = _fill7(A[0, 0])
+            t1 = _scale(A[0, 0], A[0, 0])
+            assert (t0.tid, t1.tid) in edges
+            rt.barrier()
         np.testing.assert_allclose(np.asarray(A.gather()), 7 * 1.25 + 1)
 
     def test_war_and_waw(self):
         rt = self._rt()
         edges = self._edges(rt)
-        A = rt.zeros((4, 4), (4, 4))
-        B = rt.zeros((4, 4), (4, 4))
-        r = rt.spawn(_scale, In(A[0, 0]), Out(B[0, 0]))   # reader of A
-        w1 = rt.spawn(_fill7, InOut(A[0, 0]))              # WAR on r, WAW later
-        w2 = rt.spawn(_fill7, InOut(A[0, 0]))
-        assert (r.tid, w1.tid) in edges                    # WAR
-        assert (w1.tid, w2.tid) in edges                   # WAW
-        rt.barrier()
+        with rt.scope():
+            A = rt.zeros((4, 4), (4, 4))
+            B = rt.zeros((4, 4), (4, 4))
+            r = _scale(A[0, 0], B[0, 0])       # reader of A
+            w1 = _fill7(A[0, 0])               # WAR on r, WAW later
+            w2 = _fill7(A[0, 0])
+            assert (r.tid, w1.tid) in edges                # WAR
+            assert (w1.tid, w2.tid) in edges               # WAW
+            rt.barrier()
 
     def test_disjoint_footprints_no_deps(self):
         rt = self._rt()
         edges = self._edges(rt)
-        A = rt.zeros((8, 8), (4, 4))
-        rt.spawn(_fill7, InOut(A[0, 0]))
-        rt.spawn(_fill7, InOut(A[1, 1]))
-        assert edges == []
-        rt.barrier()
+        with rt.scope():
+            A = rt.zeros((8, 8), (4, 4))
+            _fill7(A[0, 0])
+            _fill7(A[1, 1])
+            assert edges == []
+            rt.barrier()
 
     def test_multiblock_region_overlap(self):
         rt = self._rt()
         edges = self._edges(rt)
-        A = rt.zeros((8, 8), (4, 4))
-        t0 = rt.spawn(_fill7, InOut(A[0, 0:2]))   # row of blocks
-        t1 = rt.spawn(_fill7, InOut(A[0:2, 1]))   # column of blocks, overlaps
-        assert (t0.tid, t1.tid) in edges
-        rt.barrier()
+        with rt.scope():
+            A = rt.zeros((8, 8), (4, 4))
+            t0 = _fill7(A[0, 0:2])   # row of blocks
+            t1 = _fill7(A[0:2, 1])   # column of blocks, overlaps
+            assert (t0.tid, t1.tid) in edges
+            rt.barrier()
 
 
 # ---------------------------------------------------------------------------
@@ -165,10 +174,11 @@ class TestDependences:
 def test_pool_exhaustion_recycles(kind):
     rt = TaskRuntime(executor=kind, n_workers=2, pool_capacity=4,
                      mpb_slots=2)
-    A = rt.zeros((4, 4), (4, 4))
-    for _ in range(20):
-        rt.spawn(_scale, In(A[0, 0]), Out(A[0, 0]))
-    rt.barrier()
+    with rt.scope():
+        A = rt.zeros((4, 4), (4, 4))
+        for _ in range(20):
+            _scale(A[0, 0], A[0, 0])
+        rt.barrier()
     got = np.asarray(A.gather())
     expect = np.zeros((4, 4), np.float32)
     for _ in range(20):
@@ -178,25 +188,38 @@ def test_pool_exhaustion_recycles(kind):
 
 
 # ---------------------------------------------------------------------------
+# the deprecated imperative shim: warns, still drives the same path
+def test_spawn_shim_warns_and_matches():
+    def through(a):
+        return a + jnp.float32(1.0)
+
+    with TaskRuntime(executor="staged") as rt:
+        A = rt.zeros((4, 4), (4, 4))
+        with pytest.warns(DeprecationWarning, match="@task"):
+            f = rt.spawn(through, In(A[0, 0]), Out(A[0, 0]))
+        np.testing.assert_allclose(np.asarray(f.result()), 1.0)
+
+
+# ---------------------------------------------------------------------------
 # property: serial elision equivalence on random task programs
 def _random_program(rt, ops):
     """Replay a generated op list onto a runtime; return its arrays."""
-    A = rt.zeros((12, 12), (4, 4), name="A")
-    B = rt.full((12, 12), (4, 4), 1.0, name="B")
-    arrays = [A, B]
-    for op in ops:
-        kind, src_a, si, sj, dst_a, di, dj = op
-        src, dst = arrays[src_a], arrays[dst_a]
-        if kind == 0:
-            rt.spawn(_acc, InOut(dst[di, dj]), In(src[si, sj]))
-        elif kind == 1:
-            rt.spawn(_combine, In(src[si, sj]), In(dst[di, dj]),
-                     Out(dst[di, dj]))
-        elif kind == 2:
-            rt.spawn(_scale, In(src[si, sj]), Out(dst[di, dj]))
-        else:
-            rt.spawn(_fill7, InOut(dst[di, dj]))
-    rt.barrier()
+    with rt.scope():
+        A = rt.zeros((12, 12), (4, 4), name="A")
+        B = rt.full((12, 12), (4, 4), 1.0, name="B")
+        arrays = [A, B]
+        for op in ops:
+            kind, src_a, si, sj, dst_a, di, dj = op
+            src, dst = arrays[src_a], arrays[dst_a]
+            if kind == 0:
+                _acc(dst[di, dj], src[si, sj])
+            elif kind == 1:
+                _combine(src[si, sj], dst[di, dj], dst[di, dj])
+            elif kind == 2:
+                _scale(src[si, sj], dst[di, dj])
+            else:
+                _fill7(dst[di, dj])
+        rt.barrier()
     return [np.asarray(a.gather()) for a in arrays]
 
 

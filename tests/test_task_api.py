@@ -148,8 +148,9 @@ class TestTaskDecorator:
                             if use_decorator:
                                 _gemm(C[i, j], A[i, k], B[k, j])
                             else:
-                                f = rt.spawn(gemm_raw, InOut(C[i, j]),
-                                             In(A[i, k]), In(B[k, j]))
+                                with pytest.warns(DeprecationWarning):
+                                    f = rt.spawn(gemm_raw, InOut(C[i, j]),
+                                                 In(A[i, k]), In(B[k, j]))
                                 assert isinstance(f, TaskFuture)
                 rt.barrier()
                 results.append(np.asarray(C.gather()))
@@ -340,7 +341,8 @@ class TestDependenceEdgeCases:
 
         with TaskRuntime(executor="staged") as rt:
             A = rt.zeros((4, 4), (4, 4))
-            f = rt.spawn(through, In(A[0, 0]), Out(A[0, 0]))
+            with pytest.warns(DeprecationWarning):
+                f = rt.spawn(through, In(A[0, 0]), Out(A[0, 0]))
             assert f.descriptor.preds == ()
             g = _bump(A[0, 0])
             assert g.descriptor.preds == (f.descriptor,)
@@ -378,6 +380,185 @@ class TestDependenceEdgeCases:
             rt.barrier()
             np.testing.assert_allclose(
                 np.asarray(A[0, 0].materialize()), 2.0)
+
+
+# ---------------------------------------------------------------------------
+@task(in_="x", out="y", firstprivate=("k", "b"))
+def _affine(x, k, b=10.0, y=None):
+    return x * k + b
+
+
+class TestFirstprivate:
+    def test_eager_call_outside_scope(self):
+        out = _affine(jnp.ones((2, 2)), 3.0, 1.0)
+        np.testing.assert_allclose(np.asarray(out), 4.0)
+        out = _affine(jnp.ones((2, 2)), 3.0)       # default b=10
+        np.testing.assert_allclose(np.asarray(out), 13.0)
+
+    def test_values_in_descriptor_and_default(self):
+        with TaskRuntime(executor="sequential") as rt:
+            A = rt.full((4, 4), (4, 4), 1.0)
+            Y = rt.zeros((4, 4), (4, 4))
+            f = _affine(A[0, 0], 2.0, y=Y[0, 0])   # b omitted -> default
+            assert f.descriptor.values == (2.0, 10.0)
+            np.testing.assert_allclose(np.asarray(f.result()), 12.0)
+
+    def test_kwarg_and_positional_binding(self):
+        with TaskRuntime(executor="sequential") as rt:
+            A = rt.full((4, 4), (4, 4), 1.0)
+            Y = rt.zeros((4, 4), (4, 4))
+            f = _affine(b=1.0, x=A[0, 0], y=Y[0, 0], k=5.0)
+            assert f.descriptor.values == (5.0, 1.0)
+            np.testing.assert_allclose(np.asarray(f.result()), 6.0)
+
+    @pytest.mark.parametrize("kind", ["sequential", "host", "staged"])
+    def test_numerics_match_serial_elision(self, kind):
+        """Per-task values survive every executor, including the staged
+        grouped vmap path, bit-identical to sequential."""
+        def run(executor):
+            rt = TaskRuntime(executor=executor, n_workers=2)
+            try:
+                with rt.scope():
+                    A = rt.full((8, 8), (4, 4), 1.0)
+                    Y = rt.zeros((8, 8), (4, 4))
+                    for n, (i, j) in enumerate(
+                            (i, j) for i in range(2) for j in range(2)):
+                        _affine(A[i, j], float(n + 1), float(n), Y[i, j])
+                    rt.barrier()
+                return np.asarray(Y.gather())
+            finally:
+                rt.shutdown()
+        np.testing.assert_array_equal(run("sequential"), run(kind))
+
+    def test_grouped_dispatch_per_fn_and_wave(self):
+        """Same fn + same shapes + different values = ONE vmap dispatch
+        (the batching the paper measures; closures used to break this)."""
+        with TaskRuntime(executor="staged", group_waves=True) as rt:
+            A = rt.full((8, 8), (4, 4), 1.0)
+            Y = rt.zeros((8, 8), (4, 4))
+            for n, (i, j) in enumerate(
+                    (i, j) for i in range(2) for j in range(2)):
+                _affine(A[i, j], float(n), 0.0, Y[i, j])
+            rt.barrier()
+            s = rt.stats()
+            assert s.waves == 1
+            assert s.grouped_dispatches == 1, \
+                "index-parameterized tasks split into multiple dispatches"
+
+    def test_value_structure_splits_groups(self):
+        """Values fold into the grouping signature by *structure* only:
+        scalar-k tasks and vector-k tasks cannot share a vmap dispatch,
+        but same-structure tasks still do."""
+        with TaskRuntime(executor="staged", group_waves=True) as rt:
+            A = rt.full((8, 8), (4, 4), 1.0)
+            Y = rt.zeros((8, 8), (4, 4))
+            _affine(A[0, 0], 2.0, 0.0, Y[0, 0])
+            _affine(A[0, 1], 3.0, 0.0, Y[0, 1])
+            _affine(A[1, 0], jnp.full((4, 4), 4.0), 0.0, Y[1, 0])
+            _affine(A[1, 1], jnp.full((4, 4), 5.0), 0.0, Y[1, 1])
+            rt.barrier()
+            s = rt.stats()
+            assert s.waves == 1
+            assert s.grouped_dispatches == 2
+            got = np.asarray(Y.gather())
+            np.testing.assert_allclose(got[:4, :4], 2.0)
+            np.testing.assert_allclose(got[:4, 4:], 3.0)
+            np.testing.assert_allclose(got[4:, :4], 4.0)
+            np.testing.assert_allclose(got[4:, 4:], 5.0)
+
+    def test_missing_value_without_default_errors(self):
+        with TaskRuntime(executor="staged") as rt:
+            A = rt.zeros((4, 4), (4, 4))
+            Y = rt.zeros((4, 4), (4, 4))
+            with pytest.raises(TypeError, match="needs a value"):
+                _affine(A[0, 0], y=Y[0, 0])
+
+    def test_region_as_value_errors(self):
+        with TaskRuntime(executor="staged") as rt:
+            A = rt.zeros((4, 4), (4, 4))
+            Y = rt.zeros((4, 4), (4, 4))
+            with pytest.raises(TypeError, match="passed by value"):
+                _affine(A[0, 0], A[0, 0], y=Y[0, 0])
+
+    def test_scalar_provenance_shares_dispatch(self):
+        """A Python float and an np.float32 stage to the same canonical
+        dtype, so spawns differing only in scalar provenance must still
+        share one grouped dispatch."""
+        with TaskRuntime(executor="staged", group_waves=True) as rt:
+            A = rt.full((8, 8), (4, 4), 1.0)
+            Y = rt.zeros((8, 8), (4, 4))
+            _affine(A[0, 0], 2.0, 0.0, Y[0, 0])
+            _affine(A[0, 1], np.float32(3.0), np.float32(0.0), Y[0, 1])
+            rt.barrier()
+            s = rt.stats()
+            assert s.grouped_dispatches == 1
+
+    def test_overflowing_int_value_rejected_at_spawn(self):
+        """An int that cannot stage to JAX's canonical integer dtype
+        fails at the spawn site, not with an OverflowError at barrier."""
+        with TaskRuntime(executor="staged") as rt:
+            A = rt.zeros((4, 4), (4, 4))
+            Y = rt.zeros((4, 4), (4, 4))
+            with pytest.raises(TypeError, match="overflows"):
+                _affine(A[0, 0], 2 ** 40, 0.0, Y[0, 0])
+
+    @pytest.mark.parametrize("kind", ["sequential", "staged"])
+    def test_non_numeric_value_rejected_at_spawn(self, kind):
+        """A string flag must fail at the spawn site on *every* executor
+        with an error naming the parameter — not deep inside the staged
+        executor's jit/vmap tracing at barrier time."""
+        with TaskRuntime(executor=kind) as rt:
+            A = rt.zeros((4, 4), (4, 4))
+            Y = rt.zeros((4, 4), (4, 4))
+            with pytest.raises(TypeError,
+                               match="'k' must be a numeric"):
+                _affine(A[0, 0], "add", 0.0, Y[0, 0])
+
+    @pytest.mark.parametrize("kind", ["sequential", "staged"])
+    def test_missing_return_is_clear_arity_error(self, kind):
+        """A body that forgets its return statement raises the arity
+        RuntimeError (0 values for 1 OUT/INOUT), not an obscure
+        AttributeError from storing None.  (Master-thread executors only:
+        the host executor surfaces body errors on its worker threads.)"""
+        @task(inout="x")
+        def forgot_return(x):
+            x + 1.0
+
+        rt = TaskRuntime(executor=kind)
+        try:
+            with rt.scope():                 # no exit barrier: the failed
+                A = rt.zeros((4, 4), (4, 4))  # task stays pending
+                with pytest.raises(RuntimeError,
+                                   match="0 values for 1 OUT/INOUT"):
+                    forgot_return(A[0, 0]).wait()
+        finally:
+            rt.shutdown()
+
+    def test_declaration_errors(self):
+        with pytest.raises(ValueError, match="both firstprivate"):
+            task(inout="a", firstprivate="a")(lambda a: a)
+        with pytest.raises(ValueError, match="declared twice"):
+            task(inout="a", firstprivate=("k", "k"))(lambda a, k: a)
+        with pytest.raises(ValueError, match="no parameter named"):
+            task(inout="a", firstprivate="zz")(lambda a: a)
+        with pytest.raises(ValueError, match="must come first"):
+            # firstprivate param ahead of the in_/inout params mis-binds
+            task(inout="a", firstprivate="k")(lambda k, a: a)
+        with pytest.raises(ValueError, match="directly follow"):
+            # out-only param between reads and firstprivate mis-binds
+            task(in_="a", out="o", firstprivate="k")(
+                lambda a, o=None, k=0: a)
+
+    def test_closure_capture_still_rejected_at_spawn(self):
+        @task(in_="a", out="o", firstprivate="k")
+        def f(a, k, o=None, _cap=3):
+            return a * k + _cap
+
+        with TaskRuntime(executor="staged") as rt:
+            A = rt.zeros((4, 4), (4, 4))
+            Y = rt.zeros((4, 4), (4, 4))
+            with pytest.raises(TypeError, match="closure captures"):
+                f(A[0, 0], 2.0, Y[0, 0], 5)
 
 
 # ---------------------------------------------------------------------------
