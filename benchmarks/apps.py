@@ -238,3 +238,24 @@ APPS = {
     "jacobi": jacobi_app,
     "cholesky": cholesky_app,
 }
+
+
+def run_app(name: str, executor: str = "staged", **config_overrides):
+    """Run one paper app on a fresh runtime and return its RuntimeStats.
+
+    Every app self-verifies its numerics against the reference kernel, so
+    a returned stats object means the run was correct — this is what the
+    report tables and the executor-comparison tests call.  For
+    ``executor="sharded"`` install a mesh first (``repro.dist.use_mesh``)
+    to exercise the shard_map dispatch; without one the executor falls
+    back to single-device staged dispatch and still reports home traffic.
+    """
+    from repro.core import RuntimeConfig
+
+    config_overrides.setdefault("n_workers", 4)
+    rt = TaskRuntime(RuntimeConfig(executor=executor, **config_overrides))
+    try:
+        APPS[name](rt)
+        return rt.stats()
+    finally:
+        rt.shutdown()

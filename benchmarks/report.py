@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import json
 
-from repro.core import RuntimeStats, RuntimeConfig, TaskRuntime
+from repro.core import RuntimeStats
 
 from .roofline import build_table, load_all, model_params
 
@@ -63,38 +63,40 @@ def params_table() -> str:
     return "\n".join(rows)
 
 
+def _fmt_mib(nbytes) -> str:
+    return "-" if nbytes is None else f"{nbytes / 2**20:.2f}"
+
+
 def runtime_stats_table(entries: list[tuple[str, RuntimeStats]]) -> str:
-    """One row per (label, RuntimeStats) — the typed replacement for the
-    old ``stats()`` dict feeding EXPERIMENTS.md §Runtime."""
+    """One row per (label, RuntimeStats), attribute access throughout —
+    feeds EXPERIMENTS.md §Runtime.  The transfer columns are the sharded
+    executor's owner-computes accounting (cross-home = bytes a task reads
+    from blocks homed away from its output's device; '-' under executors
+    that do not place)."""
     rows = ["| app | tasks | deps | waves | grouped | spawn us/task | "
-            "barrier s | waits (region/future) |",
-            "|---|---|---|---|---|---|---|---|"]
+            "barrier s | waits (region/future) | xfer cross/local MiB |",
+            "|---|---|---|---|---|---|---|---|---|"]
     for label, s in entries:
         rows.append(
             f"| {label} | {s.tasks_spawned} | {s.deps_found} | "
             f"{s.waves if s.waves is not None else '-'} | "
             f"{s.grouped_dispatches if s.grouped_dispatches is not None else '-'} | "
             f"{s.spawn_us_per_task:.1f} | {s.barrier_time_s:.3f} | "
-            f"{s.region_waits}/{s.futures_resolved} |")
+            f"{s.region_waits}/{s.futures_resolved} | "
+            f"{_fmt_mib(s.cross_home_bytes)}/{_fmt_mib(s.local_home_bytes)} |")
     return "\n".join(rows)
 
 
 def collect_runtime_stats(executor: str = "staged") \
         -> list[tuple[str, RuntimeStats]]:
     """Run the five paper apps and collect their RuntimeStats."""
-    from .apps import APPS
-    entries = []
-    for name in sorted(APPS):
-        rt = TaskRuntime(RuntimeConfig(executor=executor, n_workers=4))
-        try:
-            APPS[name](rt)
-            entries.append((name, rt.stats()))
-        finally:
-            rt.shutdown()
-    return entries
+    from .apps import APPS, run_app
+    return [(name, run_app(name, executor)) for name in sorted(APPS)]
 
 
 def main():
+    from repro import dist
+
     print("## Params\n")
     print(params_table())
     print("\n## Dry-run (all cells)\n")
@@ -103,6 +105,13 @@ def main():
     print(roofline_table())
     print("\n## Runtime (task-graph apps, staged executor)\n")
     print(runtime_stats_table(collect_runtime_stats()))
+    # the sharded column: same apps, owner-computes placement over the
+    # ambient mesh (the single-device fallback here), with the cross-home
+    # transfer bytes the placement implies
+    print("\n## Runtime (task-graph apps, sharded executor, "
+          "owner-computes)\n")
+    with dist.use_mesh(dist.single_device_mesh()):
+        print(runtime_stats_table(collect_runtime_stats("sharded")))
 
 
 if __name__ == "__main__":

@@ -10,6 +10,7 @@ non cache-coherent hardware — implemented as:
 * :mod:`mpb`        — message-passing-buffer SPSC descriptor rings
 * :mod:`scheduler`  — the master's running/polling modes + lazy release
 * :mod:`executor`   — sequential (oracle) / host (faithful) / staged (TPU) execution
+* :mod:`sharded`    — home-aware mesh execution (owner-computes over the repro.dist mesh)
 * :mod:`placement`  — memory-controller striping -> block-cyclic device placement
 * :mod:`costmodel`  — SCC latency/contention model (Figs 3-4) + TPU roofline
 * :mod:`sim`        — discrete-event simulation of the SCC runtime (Figs 5-7)

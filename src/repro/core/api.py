@@ -47,7 +47,7 @@ Spawns return a :class:`TaskFuture`; ``future.result()`` forces only that
 task's dependence cone, not the whole graph.  :class:`RuntimeConfig`
 gathers what used to be nine ``TaskRuntime.__init__`` kwargs, and
 :class:`RuntimeStats` is the typed replacement for the old ``stats()``
-dict (it still indexes like one during the deprecation window).
+dict (the dict-style access window has closed; use attributes).
 """
 from __future__ import annotations
 
@@ -124,7 +124,7 @@ def suspend_runtime_scope():
 
 # ---------------------------------------------------------------------------
 # configuration
-_EXECUTORS = ("sequential", "host", "staged", "sim")
+_EXECUTORS = ("sequential", "host", "staged", "sim", "sharded")
 
 
 @dataclass(frozen=True)
@@ -133,14 +133,18 @@ class RuntimeConfig:
 
     * ``executor``    — "sequential" (serial-elision oracle), "host" (the
       paper's dynamic master/worker protocol), "staged" (wavefront
-      batching) or "sim" (timing-only DES on the SCC cost model).
+      batching), "sim" (timing-only DES on the SCC cost model) or
+      "sharded" (staged wavefronts placed home-aware on the ambient
+      ``repro.dist`` mesh, owner-computes; degrades to the staged path on
+      a single device).
     * ``n_workers`` / ``mpb_slots`` — worker count and per-worker MPB ring
       depth (§3.2).
     * ``pool_capacity`` — pre-allocated task-descriptor pool (§3.3).
     * ``policy``      — running-mode scheduling policy (§3.4).
-    * ``placement`` / ``n_controllers`` — block -> memory-controller map.
-    * ``group_waves`` — staged executor: fuse identical tile tasks of a
-      wavefront into one batched dispatch.
+    * ``placement`` / ``n_controllers`` — block -> memory-controller map;
+      the sharded executor reuses the same homes as mesh-device homes.
+    * ``group_waves`` — staged/sharded executors: fuse identical tile
+      tasks of a wavefront into one batched dispatch.
     * ``sim_cost_fn`` — "sim" executor: ``td -> (flops, bytes)``; the
       descriptor carries the task's footprint *and* its firstprivate
       ``values``, so costs may depend on index parameters.  Defaults to a
@@ -179,12 +183,13 @@ class RuntimeConfig:
 # statistics
 @dataclass
 class RuntimeStats:
-    """Typed runtime instrumentation (was: an ad-hoc ``stats()`` dict).
+    """Typed runtime instrumentation (was: an ad-hoc ``stats()`` dict;
+    the dict-style ``stats[...]``/``.get`` window closed after the
+    benchmarks moved to attribute access — use the fields, or
+    ``as_dict()`` for serialization).
 
     Core counters always present; executor-specific fields are None when
-    the executor does not produce them.  Dict-style access
-    (``stats["deps_found"]``, ``.get``, ``.as_dict()``) is kept for the
-    deprecation window.
+    the executor does not produce them.
     """
     tasks_spawned: int = 0
     tasks_scheduled: int = 0
@@ -200,23 +205,22 @@ class RuntimeStats:
     # host executor
     worker_busy_s: list[float] | None = None
     worker_tasks: list[int] | None = None
-    # staged executor
+    # staged / sharded executors
     waves: int | None = None
     grouped_dispatches: int | None = None
+    # sharded executor: owner-computes traffic accounting (§4.1-§4.2
+    # generalized — cross-home bytes are what the DES charges contention
+    # for) plus how many grouped dispatches went through the
+    # shard_map/vmap hybrid
+    sharded_dispatches: int | None = None
+    cross_home_bytes: int | None = None
+    local_home_bytes: int | None = None
     # sim executor
     predicted_total_s: float | None = None
 
     def as_dict(self) -> dict:
         return {k: v for k, v in dataclasses.asdict(self).items()
                 if v is not None}
-
-    def __getitem__(self, key: str):
-        if not hasattr(self, key):
-            raise KeyError(key)
-        return getattr(self, key)
-
-    def get(self, key: str, default=None):
-        return getattr(self, key, default)
 
     @property
     def spawn_us_per_task(self) -> float:

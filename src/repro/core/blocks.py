@@ -31,6 +31,21 @@ def _ceil_div(a: int, b: int) -> int:
     return -(-a // b)
 
 
+def _same_device(tiles: list) -> list:
+    """``jnp.block``/``concatenate`` refuse operands committed to
+    different devices, which happens once a mesh executor leaves each
+    output tile on its owner (owner-computes); pull everything to the
+    first tile's device before assembling."""
+    devs = set()
+    for t in tiles:
+        if hasattr(t, "devices"):
+            devs |= t.devices()
+    if len(devs) <= 1:
+        return tiles
+    target = next(iter(tiles[0].devices()))
+    return [jax.device_put(t, target) for t in tiles]
+
+
 class BlockArray:
     """An N-D array stored as a grid of tiles (BDDT "blocks").
 
@@ -139,9 +154,11 @@ class BlockArray:
 
     def gather(self):
         """Assemble the full array from tiles (the read-back at a barrier)."""
+        idxs = list(self.block_indices())
+        tiles = _same_device([self._tiles[idx] for idx in idxs])
         nested = np.empty(self.grid, dtype=object)
-        for idx in self.block_indices():
-            nested[idx] = self._tiles[idx]
+        for idx, tile in zip(idxs, tiles):
+            nested[idx] = tile
         if len(self.grid) == 1:
             return jnp.concatenate(list(nested), axis=0)
         return jnp.block(nested.tolist())
@@ -189,11 +206,14 @@ class Region:
         idxs = self.tile_indices
         if len(idxs) == 1:
             return self.array.get_tile(idxs[0])
+        tiles = _same_device([self.array.get_tile(i) for i in idxs])
         grid = tuple(len(r) for r in self.ranges)
         nested = np.empty(grid, dtype=object)
-        for pos in itertools.product(*[range(g) for g in grid]):
-            src = tuple(r[p] for r, p in zip(self.ranges, pos))
-            nested[pos] = self.array.get_tile(src)
+        # tile_indices and the position product enumerate in the same
+        # (row-major) order, so the flat tile list zips positionally
+        for pos, tile in zip(itertools.product(*[range(g) for g in grid]),
+                             tiles):
+            nested[pos] = tile
         if len(grid) == 1:
             return jnp.concatenate(list(nested), axis=0)
         return jnp.block(nested.tolist())

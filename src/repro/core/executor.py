@@ -11,6 +11,10 @@
   machine there is no dynamic master->worker dispatch at run time, so the
   descriptor traffic of the paper is staged into the compiled program —
   the dependence analysis is unchanged, only the dispatch is ahead-of-time.
+* :class:`repro.core.sharded.ShardedExecutor` — the staged wavefronts
+  placed home-aware on a device mesh (owner-computes over
+  ``BlockArray.home``); lives in its own module to keep mesh plumbing out
+  of the single-machine path.
 """
 from __future__ import annotations
 
@@ -38,9 +42,10 @@ class Executor(Protocol):
 
     Implementations: :class:`SequentialExecutor` (serial elision),
     :class:`HostExecutor` (the paper's dynamic master/worker protocol),
-    :class:`StagedExecutor` (wavefront batching for SPMD hardware) and
-    :class:`repro.core.sim.SimExecutor` (timing-only discrete-event
-    prediction on the SCC cost model).
+    :class:`StagedExecutor` (wavefront batching for SPMD hardware),
+    :class:`repro.core.sharded.ShardedExecutor` (home-aware wavefronts on
+    a device mesh) and :class:`repro.core.sim.SimExecutor` (timing-only
+    discrete-event prediction on the SCC cost model).
     """
 
     def on_spawn(self, td: TaskDescriptor, ready: bool) -> None:
@@ -273,34 +278,35 @@ class StagedExecutor(ExecutorBase):
             parts.append(("firstprivate", np.shape(v), str(dt)))
         return tuple(parts)
 
-    def _run_group(self, group: list[TaskDescriptor]) -> None:
-        fn = group[0].fn
-        if len(group) == 1 or not self.group:
-            jfn = self._jit.get(fn)
-            if jfn is None:
-                jfn = self._jit[fn] = jax.jit(fn)
-            for td in group:
-                _run_one(td, jfn)
-            return
-        for td in group:
-            td.state = TaskState.RUNNING
-        # batched dispatch: stack each READS arg across the group, then
-        # the firstprivate values as extra vmap operands — same function,
-        # different index values, one compiled dispatch per wavefront
+    def _jitted(self, fn: Callable) -> Callable:
+        jfn = self._jit.get(fn)
+        if jfn is None:
+            jfn = self._jit[fn] = jax.jit(fn)
+        return jfn
+
+    def _stack_group(self, group: list[TaskDescriptor],
+                     place: Callable | None = None) -> list:
+        """Stack each READS arg across the group, then the firstprivate
+        values as extra vmap operands — same function, different index
+        values, one compiled dispatch per wavefront.  ``place`` (if given)
+        maps each materialized operand before stacking; the sharded
+        executor uses it to pull tiles written on other devices onto a
+        common staging device."""
+        place = place or (lambda x: x)
         ins = []
         for pos in range(len(group[0].args)):
             if not group[0].args[pos].READS:
                 continue
             ins.append(jnp.stack(
-                [td.args[pos].region.materialize() for td in group]))
+                [place(td.args[pos].region.materialize()) for td in group]))
         for pos in range(len(group[0].values)):
             ins.append(jnp.stack(
-                [jnp.asarray(td.values[pos]) for td in group]))
-        vfn = self._vjit.get(fn)
-        if vfn is None:
-            vfn = self._vjit[fn] = jax.jit(jax.vmap(fn))
-        with suspend_runtime_scope():    # tracing runs fn on this thread
-            result = vfn(*ins)
+                [place(jnp.asarray(td.values[pos])) for td in group]))
+        return ins
+
+    def _store_group(self, group: list[TaskDescriptor], result) -> None:
+        """Unstack one batched result back into the group's regions and
+        captured outputs (one slice per task, in group order)."""
         result = normalize_outputs(result, len(group[0].outputs),
                                    group[0].name or group[0].tid)
         self.grouped_dispatches += 1
@@ -308,6 +314,23 @@ class StagedExecutor(ExecutorBase):
             for mode, stacked in zip(td.outputs, result):
                 mode.region.store(stacked[i])
             td.output_values = tuple(stacked[i] for stacked in result)
+
+    def _run_group(self, group: list[TaskDescriptor]) -> None:
+        fn = group[0].fn
+        if len(group) == 1 or not self.group:
+            jfn = self._jitted(fn)
+            for td in group:
+                _run_one(td, jfn)
+            return
+        for td in group:
+            td.state = TaskState.RUNNING
+        ins = self._stack_group(group)
+        vfn = self._vjit.get(fn)
+        if vfn is None:
+            vfn = self._vjit[fn] = jax.jit(jax.vmap(fn))
+        with suspend_runtime_scope():    # tracing runs fn on this thread
+            result = vfn(*ins)
+        self._store_group(group, result)
 
     def _run_waves(self, tasks: list[TaskDescriptor]) -> None:
         for wave in self._wavefronts(tasks):
@@ -338,11 +361,22 @@ class StagedExecutor(ExecutorBase):
         self.barrier()
 
 
-def _run_one(td: TaskDescriptor, jfn: Callable) -> None:
+def _run_one(td: TaskDescriptor, jfn: Callable,
+             place: Callable | None = None) -> None:
+    """Run one task through a jitted function.  ``place`` (if given) maps
+    every operand before the call — the sharded executor passes a
+    device_put so jit, following its inputs, executes the body on the
+    task's owner device."""
     td.state = TaskState.RUNNING
-    in_vals = [a.region.materialize() for a in td.args if a.READS]
+    if place is None:
+        in_vals = [a.region.materialize() for a in td.args if a.READS]
+        values = td.values
+    else:
+        in_vals = [place(a.region.materialize())
+                   for a in td.args if a.READS]
+        values = tuple(place(jnp.asarray(v)) for v in td.values)
     with suspend_runtime_scope():        # tracing runs fn on this thread
-        result = jfn(*in_vals, *td.values)
+        result = jfn(*in_vals, *values)
     outs = td.outputs
     result = normalize_outputs(result, len(outs), td.name or td.tid)
     for mode, value in zip(outs, result):

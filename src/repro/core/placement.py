@@ -18,7 +18,8 @@ import numpy as np
 
 from .blocks import BlockArray
 
-__all__ = ["assign_homes", "PLACEMENTS", "home_histogram"]
+__all__ = ["assign_homes", "PLACEMENTS", "home_histogram",
+           "device_assignment", "home_sharding"]
 
 
 def _single(ba: BlockArray, n_homes: int) -> None:
@@ -66,3 +67,59 @@ def home_histogram(ba: BlockArray, n_homes: int = 4) -> list[int]:
     for h in ba.home.values():
         hist[h] += 1
     return hist
+
+
+# ---------------------------------------------------------------------------
+# homes -> mesh devices (the generalization the ShardedExecutor consumes)
+def device_assignment(n_homes: int = 4, ctx=None) -> list:
+    """Home id -> device: block-cyclic assignment of homes onto the ambient
+    mesh's devices, the mesh generalization of controller striping — home
+    ``h`` is served by device ``h % ndev``, so striped homes spread blocks
+    over every device the way the paper's allocator spreads them over the
+    four memory controllers.
+
+    ``ctx`` is a :class:`repro.dist.MeshContext`; when None the ambient
+    context (``repro.dist.current()``) is consulted, and with no mesh
+    installed every home maps to the default local device — the
+    single-device fallback that lets the same task program run unchanged
+    in tests and CI.
+    """
+    import jax
+
+    if ctx is None:
+        from repro import dist
+        ctx = dist.current()
+    if ctx is None:
+        devices = [jax.devices()[0]]
+    else:
+        devices = list(np.asarray(ctx.mesh.devices).flat)
+    return [devices[h % len(devices)] for h in range(max(n_homes, 1))]
+
+
+def home_sharding(ba: BlockArray, ctx=None):
+    """A block-cyclic ``NamedSharding`` for the stacked-blocks view of
+    ``ba`` — an array of shape ``(n_blocks, *block_shape)`` whose leading
+    axis enumerates tiles in ``block_indices()`` order.
+
+    Sharding that axis over every mesh axis places block ``b`` on device
+    ``b % ndev``, which coincides with :func:`device_assignment` of the
+    block's home whenever homes stripe block-cyclically (the "striped"
+    policy) and the device count divides the home count.  Divisibility is
+    guarded the same way as :mod:`repro.dist.sharding`: an indivisible
+    block count degrades to replication rather than failing.  Returns
+    None when no mesh context is active (single-device fallback: there is
+    nothing to shard over).
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    if ctx is None:
+        from repro import dist
+        ctx = dist.current()
+    if ctx is None:
+        return None
+    mesh = ctx.mesh
+    ndev = int(np.prod([int(mesh.shape[a]) for a in mesh.axis_names]))
+    n_blocks = int(np.prod(ba.grid))
+    if ndev > 0 and n_blocks % ndev == 0:
+        return NamedSharding(mesh, P(tuple(mesh.axis_names)))
+    return NamedSharding(mesh, P())

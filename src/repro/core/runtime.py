@@ -35,9 +35,9 @@ Synchronization surface:
   pending writers; "out"/"inout" also waits for readers);
 * ``rt.barrier()`` — full quiescence.
 
-The imperative form ``rt.spawn(fn, In(A[i, k]), InOut(C[i, j]))`` remains
-as a thin compatibility shim over the same task-initiation path but now
-emits a :class:`DeprecationWarning`; new code uses ``@task``.  Task
+The imperative form ``rt.spawn(fn, In(A[i, k]), InOut(C[i, j]))`` is gone
+(its deprecation window closed; ``@task`` is the only spawn surface — the
+shared initiation path lives in :meth:`TaskRuntime._initiate`).  Task
 functions receive one array per READS argument (in argument order), then
 their firstprivate values (in parameter order), and return one array per
 WRITES argument (in argument order).
@@ -46,12 +46,11 @@ from __future__ import annotations
 
 import contextlib
 import time
-import warnings
 from typing import Callable, Sequence
 
 from .api import (RuntimeConfig, RuntimeStats, TaskFuture, _pop_runtime,
                   _push_runtime)
-from .blocks import AccessMode, BlockArray, In, InOut, Out, Region
+from .blocks import AccessMode, BlockArray, Region
 from .deps import DependenceAnalyzer
 from .executor import (Executor, HostExecutor, SequentialExecutor,
                        StagedExecutor)
@@ -103,6 +102,11 @@ class TaskRuntime:
                                n_workers=config.n_workers,
                                mpb_slots=config.mpb_slots,
                                cost_fn=config.sim_cost_fn)
+        if config.executor == "sharded":
+            from .sharded import ShardedExecutor
+            return ShardedExecutor(self.graph, self.scheduler,
+                                   group=config.group_waves,
+                                   n_homes=config.n_controllers)
         return StagedExecutor(self.graph, self.scheduler,
                               group=config.group_waves)
 
@@ -148,24 +152,6 @@ class TaskRuntime:
         self._exec.on_spawn(td, ready)
         self.spawn_time_s += time.perf_counter() - t0
         return TaskFuture(self, td)
-
-    def spawn(self, fn: Callable, *args: AccessMode, name: str = "",
-              values: tuple = ()) -> TaskFuture:
-        """Deprecated compatibility shim: imperative spawn with explicit
-        In/Out/InOut wrappers.  Declare footprints with the ``@task``
-        decorator instead; this form will be dropped once external callers
-        migrate (see ROADMAP) and returns the same TaskFuture."""
-        warnings.warn(
-            "rt.spawn(fn, In(...), ...) is deprecated: declare the "
-            "footprint once with @task(in_=..., out=..., inout=...) and "
-            "call the function inside the runtime scope",
-            DeprecationWarning, stacklevel=2)
-        for a in args:
-            if not isinstance(a, AccessMode):
-                raise TypeError(
-                    "spawn arguments must be In/Out/InOut(region); got "
-                    f"{type(a).__name__}")
-        return self._initiate(fn, args, name=name, values=tuple(values))
 
     # -- synchronization ---------------------------------------------------------------
     def _wait_tasks(self, tds: Sequence[TaskDescriptor],
@@ -261,6 +247,12 @@ class TaskRuntime:
         if isinstance(self._exec, StagedExecutor):
             s.waves = self._exec.waves_run
             s.grouped_dispatches = self._exec.grouped_dispatches
+        # duck-typed (like last_result below) so the single-machine path
+        # never imports the sharded module just to fill in stats
+        if getattr(self._exec, "cross_home_bytes", None) is not None:
+            s.sharded_dispatches = self._exec.sharded_dispatches
+            s.cross_home_bytes = self._exec.cross_home_bytes
+            s.local_home_bytes = self._exec.local_home_bytes
         if getattr(self._exec, "last_result", None) is not None:
             s.predicted_total_s = self._exec.predicted_total_s
         return s

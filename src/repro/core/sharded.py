@@ -1,0 +1,201 @@
+"""Home-aware mesh execution: the ShardedExecutor.
+
+The paper's central performance lesson is that memory locality dominates on
+non cache-coherent machines: BDDT-SCC stripes application data across the
+SCC's four memory controllers and keeps tasks near the controller serving
+their blocks (§4.1-§4.2).  On a device mesh the same policy is
+*owner-computes*: every block already has a home (``placement.assign_homes``),
+:func:`~repro.core.placement.device_assignment` maps homes block-cyclically
+onto the mesh's devices, and each task executes on the home device of its
+*output* footprint.  Reads of blocks homed elsewhere are cross-home
+transfers — the mesh analogue of the remote-controller accesses the DES
+(``sim.py``) charges contention for — and this executor records them in
+``RuntimeStats`` (``cross_home_bytes`` / ``local_home_bytes``) so the
+benchmark tables can show what a placement policy saves.
+
+Dispatch reuses the staged executor's wavefront grouping unchanged: tasks
+of one wavefront with the same function and footprint/value structure
+stack into one batched call.  With a mesh context active
+(:func:`repro.dist.use_mesh`) that call becomes a shard_map/vmap hybrid —
+the stacked task axis is sharded over every mesh axis (tasks sorted by
+owner so each device's slice is, under block-cyclic homes, the tasks it
+owns) and ``vmap`` maps the per-device slice.  Groups a mesh cannot split
+evenly fall back to per-owner-device sub-dispatches, and with no mesh at
+all every dispatch degrades to the plain staged path on the default
+device — the single-device fallback tests and CI run.
+
+Multi-device note: tiles written by a dispatch stay committed to their
+owner's device.  A later wave's sharded operands are assembled per
+device — each device's shard is built on that device
+(``_sharded_stack``), so tiles a task owns never move and a cross-home
+read transfers once, matching the bytes this executor accounts.
+Mixed-device tile assembly elsewhere (multi-block
+``Region.materialize``, ``BlockArray.gather``) harmonizes devices first
+(``blocks._same_device``), so the whole program runs unchanged however
+many devices back the homes.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .api import suspend_runtime_scope
+from .executor import StagedExecutor, _run_one
+from .graph import TaskDescriptor, TaskState
+from .placement import device_assignment
+
+__all__ = ["ShardedExecutor", "owner_home"]
+
+
+def owner_home(td: TaskDescriptor) -> int:
+    """Owner-computes: a task belongs to the home of its first output
+    block (the paper's locality-aware scheduling keyed on where the task's
+    result lives, not where its inputs came from)."""
+    for m in td.args:
+        if m.WRITES:
+            return m.region.array.home.get(m.region.tile_indices[0], 0)
+    return 0
+
+
+class ShardedExecutor(StagedExecutor):
+    """Staged wavefronts, placed home-aware on the ambient device mesh."""
+
+    def __init__(self, graph, scheduler, group: bool = True,
+                 n_homes: int = 4):
+        super().__init__(graph, scheduler, group=group)
+        self.n_homes = n_homes
+        self._smap: dict = {}           # (fn, mesh, n_ins) -> jitted hybrid
+        self.sharded_dispatches = 0
+        self.cross_home_bytes = 0
+        self.local_home_bytes = 0
+
+    # -- placement ----------------------------------------------------------
+    def _mesh_ctx(self):
+        from repro import dist
+        return dist.current()
+
+    def _account(self, td: TaskDescriptor, owner: int) -> None:
+        """Charge every footprint block against the owner home: blocks
+        homed elsewhere are cross-home traffic (what ``sim.py`` turns into
+        controller contention), blocks at the owner are local.  The counts
+        are policy-level — what owner-computes *must* move — independent
+        of how many physical devices back the homes, so the single-device
+        fallback reports the same numbers a real mesh would."""
+        for m in td.args:
+            arr = m.region.array
+            block_bytes = (int(np.prod(arr.block_shape))
+                           * jnp.dtype(arr.dtype).itemsize)
+            for idx in m.region.tile_indices:
+                if arr.home.get(idx, 0) != owner:
+                    self.cross_home_bytes += block_bytes
+                else:
+                    self.local_home_bytes += block_bytes
+
+    # -- dispatch -----------------------------------------------------------
+    def _run_group(self, group: list[TaskDescriptor]) -> None:
+        owners = [owner_home(td) for td in group]
+        for td, h in zip(group, owners):
+            self._account(td, h)
+        ctx = self._mesh_ctx()
+        if ctx is None:
+            # single-device fallback: identical to the staged executor
+            return super()._run_group(group)
+        mesh = ctx.mesh
+        devmap = device_assignment(self.n_homes, ctx)
+        ndev = int(np.asarray(mesh.devices).size)
+        if len(group) == 1 or not self.group:
+            jfn = self._jitted(group[0].fn)
+            for td, h in zip(group, owners):
+                dev = devmap[h % len(devmap)]
+                _run_one(td, jfn,
+                         place=lambda x, d=dev: jax.device_put(x, d))
+            return
+        # sort by owner device so the sharded task axis hands each device
+        # (under balanced block-cyclic homes) exactly the tasks it owns
+        order = sorted(range(len(group)), key=lambda i: owners[i] % ndev)
+        group = [group[i] for i in order]
+        owners = [owners[i] for i in order]
+        if len(group) % ndev == 0:
+            self._run_sharded(group, mesh)
+        else:
+            # a wave the mesh cannot split evenly: owner-computes
+            # sub-dispatches, one batched call per owner device
+            by_dev = defaultdict(list)
+            for td, h in zip(group, owners):
+                by_dev[devmap[h % len(devmap)]].append(td)
+            for dev, sub in by_dev.items():
+                self._run_subgroup_on(sub, dev)
+
+    def _sharded_stack(self, group: list[TaskDescriptor],
+                       sharding) -> list:
+        """Assemble each stacked operand (READS args then firstprivate
+        values, the staged stacking order) directly as a sharded global
+        array: every device's shard is built on that device — element
+        device_puts are no-ops for tiles the task already owns, and a
+        cross-home read moves once, matching the bytes ``_account``
+        charges (no staging-device double hop)."""
+        pulls = []
+        for pos in range(len(group[0].args)):
+            if group[0].args[pos].READS:
+                pulls.append(
+                    lambda td, p=pos: td.args[p].region.materialize())
+        for pos in range(len(group[0].values)):
+            pulls.append(lambda td, p=pos: jnp.asarray(td.values[p]))
+        n = len(group)
+        ins = []
+        for pull in pulls:
+            elts = [pull(td) for td in group]
+            shape = (n, *np.shape(elts[0]))
+            shards = []
+            for dev, idx in sharding.devices_indices_map(shape).items():
+                lo, hi, _ = idx[0].indices(n)     # the task-axis slice
+                shards.append(jnp.stack(
+                    [jax.device_put(x, dev) for x in elts[lo:hi]]))
+            ins.append(jax.make_array_from_single_device_arrays(
+                shape, sharding, shards))
+        return ins
+
+    def _run_sharded(self, group: list[TaskDescriptor], mesh) -> None:
+        """The shard_map/vmap hybrid: stacked operands are sharded along
+        the task axis over every mesh axis; inside each shard ``vmap``
+        maps the local slice."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        fn = group[0].fn
+        for td in group:
+            td.state = TaskState.RUNNING
+        spec = P(tuple(mesh.axis_names))
+        ins = self._sharded_stack(group, NamedSharding(mesh, spec))
+        key = (fn, mesh, len(ins))
+        sfn = self._smap.get(key)
+        if sfn is None:
+            sfn = self._smap[key] = jax.jit(jax.shard_map(
+                jax.vmap(fn), mesh=mesh,
+                in_specs=tuple(spec for _ in ins), out_specs=spec,
+                check_vma=False))
+        with suspend_runtime_scope():    # tracing runs fn on this thread
+            result = sfn(*ins)
+        self.sharded_dispatches += 1
+        self._store_group(group, result)
+
+    def _run_subgroup_on(self, group: list[TaskDescriptor], dev) -> None:
+        """Batched vmap dispatch pinned to one owner device (the uneven-
+        wave fallback; computation follows the placed operands)."""
+        fn = group[0].fn
+        if len(group) == 1:
+            _run_one(group[0], self._jitted(fn),
+                     place=lambda x: jax.device_put(x, dev))
+            return
+        for td in group:
+            td.state = TaskState.RUNNING
+        ins = self._stack_group(group,
+                                place=lambda x: jax.device_put(x, dev))
+        vfn = self._vjit.get(fn)
+        if vfn is None:
+            vfn = self._vjit[fn] = jax.jit(jax.vmap(fn))
+        with suspend_runtime_scope():
+            result = vfn(*ins)
+        self._store_group(group, result)

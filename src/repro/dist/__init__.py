@@ -30,7 +30,7 @@ from .context import MeshContext  # noqa: E402
 from . import sharding  # noqa: E402,F401
 
 __all__ = ["MeshContext", "use_mesh", "current", "constrain_seq",
-           "constrain_heads", "sharding"]
+           "constrain_heads", "sharding", "single_device_mesh"]
 
 _state = threading.local()
 
@@ -39,6 +39,21 @@ def current() -> MeshContext | None:
     """The innermost active mesh context, or None."""
     stack = getattr(_state, "stack", None)
     return stack[-1] if stack else None
+
+
+def single_device_mesh(axis: str = "data"):
+    """A one-device mesh over the default local device.
+
+    This is the smallest mesh the mesh-dependent code paths accept — the
+    :class:`~repro.core.sharded.ShardedExecutor`'s shard_map dispatch, the
+    sharding rules, ``placement.device_assignment`` — so single-device
+    tests and CI exercise the *same* code the real mesh runs, not a
+    separate branch.  Install it with :func:`use_mesh`.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    return Mesh(np.asarray(jax.devices()[:1]), (axis,))
 
 
 @contextlib.contextmanager

@@ -3,17 +3,17 @@
 The central property is *serial elision*: for any task program, executing
 through the dynamic host runtime or the staged wavefront runtime produces
 bit-identical results to running the tasks sequentially in program order.
-Task programs here are built on the declarative ``@task`` front-end
-(footprint-declared functions spawned inside a runtime scope); the
-deprecated imperative ``rt.spawn(fn, In(...), ...)`` shim keeps one
-warning-and-equivalence test below.
+Task programs are built on the declarative ``@task`` front-end
+(footprint-declared functions spawned inside a runtime scope); the old
+imperative ``rt.spawn(fn, In(...), ...)`` shim is gone — one test below
+pins the removal.
 """
 import numpy as np
 import pytest
 import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st
 
-from repro.core import TaskRuntime, In, InOut, Out, task
+from repro.core import TaskRuntime, task
 from repro.core.blocks import BlockArray
 from repro.core.graph import DescriptorPool, TaskState
 from repro.core.mpb import MPBQueue, SlotState
@@ -188,16 +188,11 @@ def test_pool_exhaustion_recycles(kind):
 
 
 # ---------------------------------------------------------------------------
-# the deprecated imperative shim: warns, still drives the same path
-def test_spawn_shim_warns_and_matches():
-    def through(a):
-        return a + jnp.float32(1.0)
-
+# the deprecated imperative shim is gone (window closed after one PR of
+# DeprecationWarning); @task is the only spawn surface
+def test_spawn_shim_removed():
     with TaskRuntime(executor="staged") as rt:
-        A = rt.zeros((4, 4), (4, 4))
-        with pytest.warns(DeprecationWarning, match="@task"):
-            f = rt.spawn(through, In(A[0, 0]), Out(A[0, 0]))
-        np.testing.assert_allclose(np.asarray(f.result()), 1.0)
+        assert not hasattr(rt, "spawn")
 
 
 # ---------------------------------------------------------------------------

@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 import jax.numpy as jnp
 
-from repro.core import (In, InOut, Out, RuntimeConfig, RuntimeStats,
+from repro.core import (In, InOut, RuntimeConfig, RuntimeStats,
                         TaskFuture, TaskRuntime, current_runtime, task)
 from repro.core.executor import dependence_cone
 
@@ -128,34 +128,14 @@ class TestTaskDecorator:
             with pytest.raises(TypeError, match="closure captures"):
                 cap(A[0, 0], A[0, 0], 5)
 
-    def test_compat_spawn_shim_identical(self):
-        """Old imperative spawn and @task produce identical results."""
-        def gemm_raw(c, a, b):
-            return c + a @ b
-
-        rng = np.random.default_rng(0)
-        a = rng.standard_normal((8, 8), dtype=np.float32)
-        b = rng.standard_normal((8, 8), dtype=np.float32)
-        results = []
-        for use_decorator in (False, True):
-            with TaskRuntime(executor="staged") as rt:
-                A = rt.from_array(a, (4, 4))
-                B = rt.from_array(b, (4, 4))
-                C = rt.zeros((8, 8), (4, 4))
-                for i in range(2):
-                    for j in range(2):
-                        for k in range(2):
-                            if use_decorator:
-                                _gemm(C[i, j], A[i, k], B[k, j])
-                            else:
-                                with pytest.warns(DeprecationWarning):
-                                    f = rt.spawn(gemm_raw, InOut(C[i, j]),
-                                                 In(A[i, k]), In(B[k, j]))
-                                assert isinstance(f, TaskFuture)
-                rt.barrier()
-                results.append(np.asarray(C.gather()))
-        np.testing.assert_array_equal(results[0], results[1])
-        np.testing.assert_allclose(results[1], a @ b, rtol=2e-4, atol=2e-4)
+    def test_imperative_spawn_is_gone(self):
+        """The rt.spawn(fn, In(...), ...) wrapper-arg shim was removed
+        after its deprecation window; @task spawns return futures through
+        the same initiation path it used to wrap."""
+        with TaskRuntime(executor="staged") as rt:
+            assert not hasattr(rt, "spawn")
+            A = rt.zeros((4, 4), (4, 4))
+            assert isinstance(_bump(A[0, 0]), TaskFuture)
 
 
 # ---------------------------------------------------------------------------
@@ -334,15 +314,15 @@ class TestDependenceEdgeCases:
             assert g.descriptor.preds == (f.descriptor,)
 
     def test_repeated_region_in_one_footprint(self):
-        """In(A[0,0]) + Out(A[0,0]) in one task == InOut: no self-dep,
-        and later tasks order after it."""
-        def through(a):
+        """The same region bound to an in_ param and an out param of one
+        task == InOut: no self-dep, and later tasks order after it."""
+        @task(in_="a", out="b")
+        def through(a, b=None):
             return a + 5.0
 
         with TaskRuntime(executor="staged") as rt:
             A = rt.zeros((4, 4), (4, 4))
-            with pytest.warns(DeprecationWarning):
-                f = rt.spawn(through, In(A[0, 0]), Out(A[0, 0]))
+            f = through(A[0, 0], A[0, 0])
             assert f.descriptor.preds == ()
             g = _bump(A[0, 0])
             assert g.descriptor.preds == (f.descriptor,)
@@ -593,8 +573,10 @@ class TestRuntimeConfig:
         assert isinstance(s, RuntimeStats)
         assert s.tasks_spawned == 1
         assert s.futures_resolved == 1
-        assert s["deps_found"] == 0          # dict-style compat
-        assert s.get("nonexistent", 42) == 42
+        # the dict-style access window is closed: attributes only
+        with pytest.raises(TypeError):
+            s["deps_found"]
+        assert not hasattr(s, "get")
         assert "tasks_spawned" in s.as_dict()
         assert s.waves is not None           # staged executor section
 

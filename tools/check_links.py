@@ -1,0 +1,73 @@
+"""Fail on broken intra-repo links in the documentation layer.
+
+Scans README.md and every Markdown file under docs/ for relative links
+(``[text](path)`` and ``[text](path#fragment)``), resolves each against
+the linking file's directory, and exits non-zero when any target is
+missing — the docs CI job runs this so the documentation cannot rot
+silently.  External links (http/https/mailto) and pure-fragment anchors
+are skipped; fenced code blocks are stripped first so example snippets
+never count.  ``tests/test_docs.py`` runs the same check in tier-1.
+
+    python tools/check_links.py [repo_root]
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+# [text](target) / [text](target#fragment); targets with a scheme or a
+# leading '#' are filtered below.  Images (![alt](src)) match too, which
+# is what we want.
+_LINK = re.compile(r"\[[^\]]*\]\(\s*<?([^)#\s>]+)(#[^)\s>]*)?>?\s*\)")
+_FENCE = re.compile(r"```.*?```", re.DOTALL)
+_SCHEMES = ("http://", "https://", "mailto:", "ftp://")
+
+# the documentation layer that must exist at all (a missing file is a
+# broken link from everywhere)
+REQUIRED = ("README.md", "docs/ARCHITECTURE.md")
+
+
+def doc_files(root: pathlib.Path) -> list[pathlib.Path]:
+    files = [root / "README.md"]
+    docs = root / "docs"
+    if docs.is_dir():
+        files.extend(sorted(docs.glob("**/*.md")))
+    return files
+
+
+def check(root: pathlib.Path) -> list[tuple[pathlib.Path, str]]:
+    """Return (file, target) pairs for every broken link."""
+    bad: list[tuple[pathlib.Path, str]] = []
+    for rel in REQUIRED:
+        if not (root / rel).is_file():
+            bad.append((root / rel, "<required documentation file missing>"))
+    for f in doc_files(root):
+        if not f.is_file():
+            continue
+        text = _FENCE.sub("", f.read_text(encoding="utf-8"))
+        for m in _LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(_SCHEMES):
+                continue
+            if not (f.parent / target).resolve().exists():
+                bad.append((f, target))
+    return bad
+
+
+def main(argv: list[str] | None = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    root = pathlib.Path(argv[0]) if argv else \
+        pathlib.Path(__file__).resolve().parent.parent
+    bad = check(root)
+    for f, target in bad:
+        print(f"{f.relative_to(root) if f.is_relative_to(root) else f}: "
+              f"broken link -> {target}")
+    n_files = len([f for f in doc_files(root) if f.is_file()])
+    print(f"checked {n_files} markdown file(s): "
+          f"{'FAIL, ' + str(len(bad)) + ' broken' if bad else 'all links ok'}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
