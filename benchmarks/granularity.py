@@ -4,7 +4,10 @@ scheduling tasks the bottleneck, limiting scalability".
 Matrix-multiply at fixed problem size with shrinking tiles: finer tasks
 expose more parallelism but raise the master's per-task spawn/schedule
 cost until workers starve (idle time from the master, exactly the paper's
-FFT >=10-worker observation).
+FFT >=10-worker observation).  The sweep's optimum must sit at an
+*interior* tile size — too coarse starves workers of parallelism, too
+fine starves them via the master — which is what the calibration step
+(``repro.core.calibrate``) and the CI bench gate assert.
 """
 from __future__ import annotations
 
@@ -13,11 +16,14 @@ from repro.core.sim import sequential_time, simulate
 
 from .workloads import matmul
 
+TILES = (256, 128, 64, 32, 16)
 
-def sweep(p: SCCParams = SCCParams(), *, workers: int = 43,
-          n: int = 1024):
+
+def sweep(p: SCCParams | None = None, *, workers: int = 43,
+          n: int = 1024, tiles=TILES):
+    p = p or SCCParams()
     rows = []
-    for tile in (256, 128, 64, 32, 16):
+    for tile in tiles:
         tasks = matmul("striped", n=n, tile=tile)
         seq = sequential_time(tasks, p)
         r = simulate(matmul("striped", n=n, tile=tile), workers, p)
@@ -32,8 +38,9 @@ def sweep(p: SCCParams = SCCParams(), *, workers: int = 43,
     return rows
 
 
-def run(report):
-    rows = sweep()
+def run(report, *, p: SCCParams | None = None, workers: int = 43,
+        n: int = 1024, tiles=TILES):
+    rows = sweep(p, workers=workers, n=n, tiles=tiles)
     for r in rows:
         report("granularity", f"tile={r['tile']}", r["speedup"])
         report("granularity", f"idle_frac_tile={r['tile']}",

@@ -30,15 +30,15 @@ def fig4_contention(p: SCCParams = SCCParams(), *, ref_hops: int = 9):
     return rows
 
 
-def run(report):
-    p = SCCParams()
+def run(report, p: SCCParams | None = None):
+    p = p or SCCParams()
     f3 = fig3_latency_vs_hops(p)
     for r in f3:
         report("fig3_latency", f"hops={r['hops']}", r["time_s"] * 1e6)
     ratio3 = f3[-1]["time_s"] / f3[0]["time_s"]
     report("fig3_latency", "far_vs_near_ratio", ratio3)
 
-    f4 = fig4_contention(p)
+    f4 = fig4_contention(p=p)
     for r in f4[:32:4]:
         report("fig4_contention", f"cores={r['cores']}", r["time_s"] * 1e6)
     ratio4 = f4[-1]["time_s"] / f4[0]["time_s"]

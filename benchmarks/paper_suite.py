@@ -4,6 +4,10 @@ Per application: execution time + speedup vs worker count (Fig 5),
 cumulative idle/app/flush breakdowns (Fig 6), and per-worker load balance
 at 43 workers (Fig 7).  The ``single`` placement column quantifies the
 paper's contention pathology against the ``striped`` fix (§4.2).
+
+Everything is parameterized so the unified harness (``benchmarks.run``)
+can run the same sweeps at smoke sizes and on calibrated
+:class:`~repro.core.costmodel.SCCParams`.
 """
 from __future__ import annotations
 
@@ -16,13 +20,15 @@ WORKER_COUNTS = [1, 2, 4, 8, 12, 16, 22, 28, 36, 43]
 
 
 def scalability(name: str, placement: str = "striped",
-                p: SCCParams = SCCParams(),
-                worker_counts=None) -> dict:
+                p: SCCParams | None = None,
+                worker_counts=None, gen_kwargs: dict | None = None) -> dict:
+    p = p or SCCParams()
     gen = WORKLOADS[name]
-    seq = sequential_time(gen(placement), p)
+    kw = gen_kwargs or {}
+    seq = sequential_time(gen(placement, **kw), p)
     rows = []
     for w in worker_counts or WORKER_COUNTS:
-        r = simulate(gen(placement), w, p)
+        r = simulate(gen(placement, **kw), w, p)
         rows.append({
             "workers": w,
             "time_s": r.total_s,
@@ -36,8 +42,10 @@ def scalability(name: str, placement: str = "striped",
 
 
 def load_balance(name: str, workers: int = 43,
-                 p: SCCParams = SCCParams()) -> dict:
-    r = simulate(WORKLOADS[name]("striped"), workers, p)
+                 p: SCCParams | None = None,
+                 gen_kwargs: dict | None = None) -> dict:
+    r = simulate(WORKLOADS[name]("striped", **(gen_kwargs or {})),
+                 workers, p or SCCParams())
     return {
         "name": name,
         "busy": r.worker_busy_s,
@@ -52,11 +60,20 @@ def peak(rows) -> tuple[int, float]:
     return best["workers"], best["speedup"]
 
 
-def run(report):
-    """Emit Fig 5/6/7 numbers; return the validation summary."""
+def run(report, *, p: SCCParams | None = None, worker_counts=None,
+        sizes: dict | None = None):
+    """Emit Fig 5/6/7 numbers; return the validation summary.
+
+    ``sizes`` maps workload name -> generator kwargs (smoke profiles
+    shrink the graphs); ``p`` is the (calibrated) cost model.
+    """
+    p = p or SCCParams()
+    sizes = sizes or {}
     summary = {}
     for name in WORKLOADS:
-        res = scalability(name)
+        kw = sizes.get(name)
+        res = scalability(name, p=p, worker_counts=worker_counts,
+                          gen_kwargs=kw)
         for row in res["rows"]:
             report(f"fig5_{name}", f"w={row['workers']}",
                    row["speedup"])
@@ -71,16 +88,18 @@ def run(report):
                last["flush_s"] / max(last["idle_s"] + last["app_s"]
                                      + last["flush_s"], 1e-12))
         summary[name] = {"peak_workers": w_peak, "peak_speedup": s_peak,
-                         "speedup_43": last["speedup"]}
+                         "speedup_43": last["speedup"],
+                         "rows": res["rows"]}
         # contention pathology: same app homed on one controller
-        res1 = scalability(name, placement="single",
-                           worker_counts=[43])
+        last_w = (worker_counts or WORKER_COUNTS)[-1]
+        res1 = scalability(name, placement="single", p=p,
+                           worker_counts=[last_w], gen_kwargs=kw)
         report(f"fig5_{name}", "speedup_43_single_mc",
                res1["rows"][0]["speedup"])
         summary[name]["speedup_43_single_mc"] = res1["rows"][0]["speedup"]
     # Fig 7 load balance: coefficient of variation of busy time
     for name in WORKLOADS:
-        lb = load_balance(name)
+        lb = load_balance(name, p=p, gen_kwargs=sizes.get(name))
         import numpy as np
         busy = np.array(lb["busy"])
         cv = float(busy.std() / max(busy.mean(), 1e-12))

@@ -94,7 +94,63 @@ def collect_runtime_stats(executor: str = "staged") \
     return [(name, run_app(name, executor)) for name in sorted(APPS)]
 
 
-def main():
+def bench_table(doc: dict) -> str:
+    """Render a BENCH JSON document (``bddt-scc-bench/1``, produced by
+    ``python -m benchmarks.run --emit``) as the EXPERIMENTS §Bench
+    section — the human view of the artifact the CI gate diffs."""
+    by_kind: dict[str, list[dict]] = {}
+    for e in doc["entries"]:
+        by_kind.setdefault(e["kind"], []).append(e)
+    out = [f"suite: `{doc['suite']}` · validation "
+           f"{doc['validation']['passed']}/{doc['validation']['total']} · "
+           f"harness {doc['wall_s']:.0f}s"]
+    c = doc["calibration"]
+    out.append(f"\ncalibrated SCCParams: base {c['dram_base_cycles']:.1f} "
+               f"cyc, {c['dram_hop_cycles']:.2f} cyc/hop, "
+               f"alpha {c['contention_alpha']:.3f} "
+               f"(fit err {100 * c['fig3_max_rel_err']:.1f}% / "
+               f"{100 * c['fig4_max_rel_err']:.1f}%)")
+    out.append("\n| app | tasks | grouped | sim predicted s | "
+               "single-MC s | cross-home MiB | staged wall s |")
+    out.append("|---|---|---|---|---|---|---|")
+    for e in by_kind.get("app", []):
+        m, i = e["metrics"], e["info"]
+        out.append(
+            f"| {e['id'].split('/', 1)[1]} | {m['tasks']} | "
+            f"{m['grouped_dispatches']} | {m['sim_predicted_s']:.4f} | "
+            f"{m['sim_predicted_single_mc_s']:.4f} | "
+            f"{_fmt_mib(m['cross_home_bytes'])} | "
+            f"{i['wall_s_staged']:.2f} |")
+    out.append("\n| workload | peak speedup | speedup@last | single-MC |")
+    out.append("|---|---|---|---|")
+    for e in by_kind.get("scalability", []):
+        m = e["metrics"]
+        last = e["checkpoints"][-1]
+        out.append(f"| {e['id'].split('/', 1)[1]} | "
+                   f"{m['peak_speedup']:.1f} | {last['speedup']:.1f} | "
+                   f"{m['speedup_single_mc']:.1f} |")
+    for e in by_kind.get("granularity", []):
+        sweep = ", ".join(f"{r['tile']}→{r['speedup']:.1f}"
+                          for r in e["rows"])
+        out.append(f"\ngranularity (tile→speedup): {sweep} "
+                   f"(best: {e['info']['best_tile']})")
+    return "\n".join(out)
+
+
+def main(argv=None):
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", metavar="BENCH_JSON",
+                    help="render a benchmarks.run --emit artifact instead "
+                         "of executing the apps")
+    args = ap.parse_args(argv)
+    if args.bench:
+        with open(args.bench, encoding="utf-8") as f:
+            print("## Bench\n")
+            print(bench_table(json.load(f)))
+        return
+
     from repro import dist
 
     print("## Params\n")

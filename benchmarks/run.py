@@ -1,14 +1,65 @@
-"""Benchmark harness — one section per paper figure/table plus the
-roofline.  Prints ``name,metric,value`` CSV lines and a validation summary
-against the paper's claims.
+"""Unified benchmark harness — one CLI over the microbenchmarks, the DES
+paper suite, the granularity sweep, and the real ``@task`` applications.
 
-    PYTHONPATH=src python -m benchmarks.run [--skip-roofline]
+Runs the cost-model calibration first (``repro.core.calibrate``), then
+every sweep on the *calibrated* parameters, then the five paper apps for
+real on the staged / sharded / sim executors — the sim runs use the
+default flopcount-derived cost, so the JSON records both measured wall
+time and the DES's predicted SCC time for the same task program.
+
+    PYTHONPATH=src python -m benchmarks.run --suite smoke --emit BENCH_4.json
+    PYTHONPATH=src python -m benchmarks.run --suite paper
+
+Output: ``name,metric,value`` CSV lines for humans, a validation summary
+against the paper's claims (exit 1 on failure), and — with ``--emit`` — a
+machine-readable BENCH JSON document (schema ``bddt-scc-bench/1``,
+specified in docs/BENCHMARKS.md) that ``tools/bench_gate.py`` diffs
+against the committed baseline in CI and ``benchmarks.report`` renders
+as a table.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import time
+
+SCHEMA = "bddt-scc-bench/1"
+
+# problem sizes per suite: "smoke" shrinks both the synthetic DES
+# workloads and the real app instances so the whole suite fits in a CI
+# job; "paper" is the §4.2 configuration
+SUITES: dict = {
+    "smoke": {
+        "worker_counts": [1, 4, 8, 16, 43],
+        "workload_sizes": {
+            "black_scholes": {"n_options": 200_000},
+            "matmul": {"n": 512},
+            "fft": {"n": 512},
+            "jacobi": {"n": 2048, "iters": 4},
+            "cholesky": {"n": 1024},
+        },
+        "granularity": {"n": 512, "tiles": (128, 64, 32, 16)},
+        "app_sizes": {
+            "black_scholes": {"n_options": 2048, "task_options": 256},
+            "matmul": {"n": 128, "tile": 32},
+            "fft": {"n": 64, "row_block": 16, "tile": 16},
+            "jacobi": {"n": 128, "tile": 32, "iters": 2},
+            "cholesky": {"n": 128, "tile": 32},
+        },
+        "app_workers": 8,
+        "paper_ranges": False,
+    },
+    "paper": {
+        "worker_counts": None,          # paper_suite.WORKER_COUNTS
+        "workload_sizes": {},
+        "granularity": {"n": 1024, "tiles": (256, 128, 64, 32, 16)},
+        "app_sizes": {},                # apps.py defaults
+        "app_workers": 8,
+        "paper_ranges": True,
+    },
+}
 
 
 def _report(name: str, metric, value) -> None:
@@ -39,70 +90,234 @@ def runtime_overheads(report) -> dict:
         spawn_us = dt / n * 1e6
         report("runtime_overhead", "spawn_us_per_task", round(spawn_us, 2))
         s = rt.stats()
-        report("runtime_overhead", "blocks_walked_per_task",
-               s.blocks_walked / max(s.tasks_spawned, 1))
-    return {"spawn_us": spawn_us}
+        blocks_per_task = s.blocks_walked / max(s.tasks_spawned, 1)
+        report("runtime_overhead", "blocks_walked_per_task", blocks_per_task)
+    return {"spawn_us": spawn_us, "blocks_walked_per_task": blocks_per_task}
+
+
+def app_entries(cfg: dict, report, sim_params=None) -> list[dict]:
+    """The five paper apps as real task programs: staged (wall time +
+    dispatch counts), sharded on the single-device mesh (deterministic
+    cross-home traffic of the striped placement), and sim twice — striped
+    and single placement — predicting SCC time on ``sim_params`` (the
+    calibrated model when called from :func:`build_bench`)."""
+    from repro import dist
+    from .apps import APPS, run_app
+
+    entries = []
+    workers = cfg["app_workers"]
+    for name in sorted(APPS):
+        kw = cfg["app_sizes"].get(name, {})
+        t0 = time.perf_counter()
+        staged = run_app(name, "staged", app_kwargs=kw, n_workers=workers)
+        wall_staged = time.perf_counter() - t0
+        with dist.use_mesh(dist.single_device_mesh()):
+            sharded = run_app(name, "sharded", app_kwargs=kw,
+                              n_workers=workers)
+        sim = run_app(name, "sim", app_kwargs=kw, n_workers=workers,
+                      sim_params=sim_params)
+        sim1 = run_app(name, "sim", app_kwargs=kw, n_workers=workers,
+                       placement="single", sim_params=sim_params)
+        report(f"app_{name}", "wall_s_staged", round(wall_staged, 3))
+        report(f"app_{name}", "sim_predicted_s", sim.predicted_total_s)
+        report(f"app_{name}", "cross_home_MiB",
+               round(sharded.cross_home_bytes / 2**20, 3))
+        entries.append({
+            "id": f"app/{name}",
+            "kind": "app",
+            "info": {
+                "sizes": kw,
+                "n_workers": workers,
+                "wall_s_staged": wall_staged,
+                "spawn_us_per_task": staged.spawn_us_per_task,
+            },
+            "metrics": {
+                "tasks": staged.tasks_spawned,
+                "deps": staged.deps_found,
+                "waves": staged.waves,
+                "grouped_dispatches": staged.grouped_dispatches,
+                "cross_home_bytes": sharded.cross_home_bytes,
+                "local_home_bytes": sharded.local_home_bytes,
+                "sim_predicted_s": sim.predicted_total_s,
+                "sim_predicted_single_mc_s": sim1.predicted_total_s,
+            },
+        })
+    return entries
+
+
+def build_bench(suite: str, *, skip_roofline: bool = True,
+                report=_report) -> tuple[dict, bool]:
+    """Run the whole suite; returns (BENCH document, all checks passed)."""
+    import dataclasses
+
+    from repro.core.calibrate import calibrate, validate_trends
+    from . import granularity, microbench, paper_suite
+
+    cfg = SUITES[suite]
+    t_start = time.perf_counter()
+
+    # 1. calibration: fit SCCParams to the paper's Fig 3/4 anchors and
+    # check the fitted model still shows the paper's trends — validated
+    # explicitly (not via calibrate()'s raise) so a broken trend lands in
+    # the validation summary as a FAIL line instead of a traceback
+    cal = calibrate(validate=False)
+    cal = dataclasses.replace(cal, checks=validate_trends(cal.params))
+    p = cal.params
+    for k, v in cal.as_dict().items():
+        if k != "checks":
+            report("calibration", k, v)
+
+    # 2. model microbenchmarks + DES sweeps, all on calibrated params
+    micro = microbench.run(report, p)
+    sweeps = paper_suite.run(report, p=p,
+                             worker_counts=cfg["worker_counts"],
+                             sizes=cfg["workload_sizes"])
+    gran = granularity.run(report, p=p, **cfg["granularity"])
+
+    # 3. the real @task programs (sim runs predict on the fitted model)
+    apps = app_entries(cfg, report, sim_params=p)
+    over = runtime_overheads(report)
+
+    entries: list[dict] = [{
+        "id": "microbench",
+        "kind": "microbench",
+        "info": {},
+        "metrics": {"fig3_far_vs_near": micro["fig3_far_near"],
+                    "fig4_32_vs_1": micro["fig4_32_1"]},
+    }]
+    for name, s in sweeps.items():
+        metrics = {f"speedup_w{r['workers']}": r["speedup"]
+                   for r in s["rows"]}
+        metrics["peak_speedup"] = s["peak_speedup"]
+        metrics["speedup_single_mc"] = s["speedup_43_single_mc"]
+        metrics["busy_cv"] = s["busy_cv_43"]
+        entries.append({
+            "id": f"scalability/{name}",
+            "kind": "scalability",
+            "checkpoints": [{k: r[k] for k in
+                             ("workers", "time_s", "speedup")}
+                            for r in s["rows"]],
+            "info": {"peak_workers": s["peak_workers"]},
+            "metrics": metrics,
+        })
+    best = max(range(len(gran)), key=lambda i: gran[i]["speedup"])
+    entries.append({
+        "id": "granularity",
+        "kind": "granularity",
+        "rows": gran,
+        "info": {"best_tile": gran[best]["tile"]},
+        "metrics": {**{f"speedup_tile{r['tile']}": r["speedup"]
+                       for r in gran},
+                    "peak_speedup": gran[best]["speedup"]},
+    })
+    entries.extend(apps)
+    entries.append({
+        "id": "runtime_overhead",
+        "kind": "overhead",
+        "info": {"spawn_us_per_task": over["spawn_us"]},
+        "metrics": {
+            "blocks_walked_per_task": over["blocks_walked_per_task"]},
+    })
+
+    roofline_note = "skipped (--skip-roofline)"
+    if not skip_roofline:
+        try:
+            from . import roofline
+            roofline.run(report)
+            roofline_note = "ok"
+        except Exception as e:  # dry-run artifacts missing
+            roofline_note = str(e)[:80]
+            report("roofline", "skipped", roofline_note)
+
+    # ---- validation vs the paper's claims -------------------------------
+    by_id = {e["id"]: e for e in entries}
+    gemm_sim = by_id["app/matmul"]["metrics"]
+    checks = {
+        # calibration reproduced the microbenchmark shapes and trends
+        "calibration_ok": cal.ok and cal.fig3_max_rel_err < 0.05
+        and cal.fig4_max_rel_err < 0.05,
+        # Fig 3/4 shapes on the fitted model
+        "fig3_latency_grows_with_hops": micro["fig3_far_near"] > 1.2,
+        "fig4_contention_grows": micro["fig4_32_1"] > 5.0,
+        # striping beats single-controller placement for the memory-bound
+        # apps (the paper's placement fix) — on the DES workloads
+        "striping_helps_fft":
+            sweeps["fft"]["speedup_43_single_mc"]
+            < 0.7 * sweeps["fft"]["speedup_43"],
+        "striping_helps_jacobi":
+            sweeps["jacobi"]["speedup_43_single_mc"]
+            < 0.7 * sweeps["jacobi"]["speedup_43"],
+        # ... and on the *real* gemm task program under executor="sim"
+        # with the default flopcount-derived cost
+        "sim_app_striped_beats_single":
+            gemm_sim["sim_predicted_s"]
+            < gemm_sim["sim_predicted_single_mc_s"],
+        # granularity: the optimum is interior (too fine hits the master
+        # bottleneck, too coarse starves workers)
+        "granularity_interior_optimum": 0 < best < len(gran) - 1,
+    }
+    if cfg["paper_ranges"]:
+        checks.update({
+            # Fig 5: MM scales to ~33x (we accept 25-40)
+            "mm_speedup_43_in_range":
+                25 <= sweeps["matmul"]["speedup_43"] <= 40,
+            # BS scales near-linearly but sub-ideal (paper ~16x)
+            "bs_speedup_43_in_range":
+                10 <= sweeps["black_scholes"]["speedup_43"] <= 25,
+            # FFT saturates around 16 workers
+            "fft_saturates": sweeps["fft"]["peak_speedup"] < 8,
+            # load stays balanced for BS/MM (Fig 7)
+            "bs_balanced": sweeps["black_scholes"]["busy_cv_43"] < 0.2,
+            "mm_balanced": sweeps["matmul"]["busy_cv_43"] < 0.2,
+            # finest tiles lose to mid tiles (master bottleneck)
+            "granularity_master_bottleneck":
+                gran[-1]["speedup"] < gran[-3]["speedup"],
+        })
+    ok = sum(bool(v) for v in checks.values())
+    for k, v in checks.items():
+        report("validation", k, "PASS" if v else "FAIL")
+    report("validation", "total", f"{ok}/{len(checks)}")
+    wall = time.perf_counter() - t_start
+    report("harness", "wall_s", round(wall, 1))
+
+    try:
+        import jax
+        jax_version = jax.__version__
+    except Exception:
+        jax_version = None
+    doc = {
+        "schema": SCHEMA,
+        "suite": suite,
+        "wall_s": wall,
+        "env": {"python": platform.python_version(), "jax": jax_version},
+        "calibration": cal.as_dict(),
+        "entries": entries,
+        "validation": {"checks": {k: bool(v) for k, v in checks.items()},
+                       "passed": ok, "total": len(checks),
+                       "roofline": roofline_note},
+    }
+    return doc, ok == len(checks)
 
 
 def main(argv=None) -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description="BDDT-SCC benchmark suite (schema: " + SCHEMA + ")")
+    ap.add_argument("--suite", choices=sorted(SUITES), default="smoke",
+                    help="problem-size profile (smoke=CI, paper=§4.2)")
+    ap.add_argument("--emit", metavar="PATH",
+                    help="write the BENCH JSON document here")
     ap.add_argument("--skip-roofline", action="store_true",
                     help="skip reading dry-run artifacts")
-    ap.add_argument("--quick", action="store_true",
-                    help="smaller DES sweeps (CI)")
     args = ap.parse_args(argv)
 
-    from . import granularity, microbench, paper_suite
-
     print("name,metric,value")
-    t0 = time.perf_counter()
-
-    micro = microbench.run(_report)
-    suite = paper_suite.run(_report)
-    gran = granularity.run(_report)
-    over = runtime_overheads(_report)
-
-    if not args.skip_roofline:
-        try:
-            from . import roofline
-            roofline.run(_report)
-        except Exception as e:  # dry-run artifacts missing
-            _report("roofline", "skipped", str(e)[:80])
-
-    # ---- validation vs the paper's claims -------------------------------
-    checks = {
-        # Fig 3/4 shapes
-        "fig3_latency_grows_with_hops": micro["fig3_far_near"] > 1.2,
-        "fig4_contention_grows": micro["fig4_32_1"] > 5.0,
-        # Fig 5: MM scales to ~33x (we accept 25-40)
-        "mm_speedup_43_in_range":
-            25 <= suite["matmul"]["speedup_43"] <= 40,
-        # BS scales near-linearly but sub-ideal (paper ~16x)
-        "bs_speedup_43_in_range":
-            10 <= suite["black_scholes"]["speedup_43"] <= 25,
-        # FFT saturates around 16 workers
-        "fft_saturates": suite["fft"]["peak_speedup"] < 8,
-        # striping beats single-controller placement for the memory-bound
-        # apps (the paper's placement fix)
-        "striping_helps_fft":
-            suite["fft"]["speedup_43_single_mc"]
-            < 0.7 * suite["fft"]["speedup_43"],
-        "striping_helps_jacobi":
-            suite["jacobi"]["speedup_43_single_mc"]
-            < 0.7 * suite["jacobi"]["speedup_43"],
-        # load stays balanced for BS/MM (Fig 7)
-        "bs_balanced": suite["black_scholes"]["busy_cv_43"] < 0.2,
-        "mm_balanced": suite["matmul"]["busy_cv_43"] < 0.2,
-        # granularity: finest tiles lose to mid tiles (master bottleneck)
-        "granularity_master_bottleneck":
-            gran[-1]["speedup"] < gran[-3]["speedup"],
-    }
-    ok = sum(bool(v) for v in checks.values())
-    for k, v in checks.items():
-        _report("validation", k, "PASS" if v else "FAIL")
-    _report("validation", "total", f"{ok}/{len(checks)}")
-    _report("harness", "wall_s", round(time.perf_counter() - t0, 1))
-    if ok != len(checks):
+    doc, ok = build_bench(args.suite, skip_roofline=args.skip_roofline)
+    if args.emit:
+        with open(args.emit, "w", encoding="utf-8") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {args.emit} ({len(doc['entries'])} entries)")
+    if not ok:
         sys.exit(1)
 
 

@@ -147,8 +147,15 @@ class RuntimeConfig:
       tasks of a wavefront into one batched dispatch.
     * ``sim_cost_fn`` — "sim" executor: ``td -> (flops, bytes)``; the
       descriptor carries the task's footprint *and* its firstprivate
-      ``values``, so costs may depend on index parameters.  Defaults to a
-      footprint-derived estimate.
+      ``values``, so costs may depend on index parameters.  Defaults to
+      :class:`repro.core.sim.FlopcountCost` — exact jaxpr flop/byte
+      accounting of the traced kernel body plus the footprint's DRAM
+      traffic (falls back to a footprint-derived estimate for bodies
+      that cannot be abstractly traced).
+    * ``sim_params`` — "sim" executor: the
+      :class:`~repro.core.costmodel.SCCParams` the DES runs on; None
+      means the uncalibrated defaults (``repro.core.calibrate.calibrate``
+      produces a fitted instance).
     """
     executor: str = "host"
     n_workers: int = 4
@@ -160,6 +167,7 @@ class RuntimeConfig:
     group_waves: bool = True
     seed: int = 0
     sim_cost_fn: Callable | None = None
+    sim_params: object | None = None
 
     def validate(self) -> "RuntimeConfig":
         from .scheduler import POLICIES

@@ -101,7 +101,8 @@ class TaskRuntime:
             return SimExecutor(self.graph, self.scheduler,
                                n_workers=config.n_workers,
                                mpb_slots=config.mpb_slots,
-                               cost_fn=config.sim_cost_fn)
+                               cost_fn=config.sim_cost_fn,
+                               params=config.sim_params)
         if config.executor == "sharded":
             from .sharded import ShardedExecutor
             return ShardedExecutor(self.graph, self.scheduler,

@@ -24,8 +24,8 @@ from .costmodel import (SCCParams, core_core_hops, core_mc_hops,
                         master_core_choice, worker_order)
 from .executor import ExecutorBase
 
-__all__ = ["SimTask", "SimResult", "SimExecutor", "simulate",
-           "sequential_time"]
+__all__ = ["SimTask", "SimResult", "SimExecutor", "FlopcountCost",
+           "simulate", "sequential_time"]
 
 
 @dataclass
@@ -75,6 +75,72 @@ class SimResult:
         }
 
 
+class FlopcountCost:
+    """The default ``sim_cost_fn``: exact jaxpr flop/byte accounting of the
+    task *body* (``launch/flopcount.py``) combined with the descriptor's
+    declared footprint.
+
+    The task function is traced once per (function, input-structure) pair
+    on abstract arguments shaped like its READS regions and firstprivate
+    values; walking the jaxpr gives exact ``dot_general`` / FFT / reduction
+    flops with every loop multiplier applied.  DRAM bytes are the larger of
+
+    * the jaxpr's fusion-adjusted byte estimate (intermediates that
+      materialize at dot/reduce boundaries), and
+    * the footprint traffic a non-coherent SCC core cannot avoid: every
+      READS region fetched from DRAM plus every WRITES region flushed back
+      (an ``inout`` region counts for both).
+
+    Results are cached on input *structure* (shapes/dtypes, never values),
+    so per-task cost still varies with footprint size but tracing happens
+    once per kernel shape.  Bodies that cannot be abstractly traced (rare:
+    value-dependent Python control flow) fall back to the old
+    footprint-derived estimate of :meth:`SimExecutor._footprint_cost`.
+    """
+
+    def __init__(self):
+        self._cache: dict[tuple, tuple[float, float] | None] = {}
+
+    @staticmethod
+    def _abstract_args(td) -> list:
+        import jax
+
+        args = [jax.ShapeDtypeStruct(m.region.shape,
+                                     np.dtype(m.region.array.dtype))
+                for m in td.args if m.READS]
+        for v in td.values:
+            dt = jax.dtypes.canonicalize_dtype(np.result_type(v))
+            args.append(jax.ShapeDtypeStruct(np.shape(v), dt))
+        return args
+
+    def _key(self, td) -> tuple:
+        parts: list = [td.fn]
+        for m in td.args:
+            parts.append((type(m).__name__, m.region.shape,
+                          str(m.region.array.dtype)))
+        for v in td.values:
+            parts.append((np.shape(v), str(np.result_type(v))))
+        return tuple(parts)
+
+    def __call__(self, td) -> tuple[float, float]:
+        key = self._key(td)
+        counted = self._cache.get(key, False)
+        if counted is False:
+            try:
+                from repro.launch.flopcount import count_step
+                c = count_step(td.fn, *self._abstract_args(td))
+                counted = (float(c["flops"]), float(c["bytes"]))
+            except Exception:
+                counted = None           # untraceable body
+            self._cache[key] = counted
+        if counted is None:
+            return SimExecutor._footprint_cost(td)
+        flops, jaxpr_bytes = counted
+        read_b = sum(m.region.nbytes for m in td.args if m.READS)
+        write_b = sum(m.region.nbytes for m in td.args if m.WRITES)
+        return flops, max(jaxpr_bytes, float(read_b + write_b))
+
+
 class SimExecutor(ExecutorBase):
     """The DES behind the :class:`~repro.core.executor.Executor` protocol.
 
@@ -85,6 +151,12 @@ class SimExecutor(ExecutorBase):
     outputs are **not** computed (timing-only); the predicted makespan
     lands in ``RuntimeStats.predicted_total_s`` and the full
     :class:`SimResult` in :attr:`last_result`.
+
+    Per-task costs default to :class:`FlopcountCost` — exact jaxpr flop
+    and byte accounting of the traced kernel body plus the footprint's
+    unavoidable DRAM traffic; pass ``sim_cost_fn`` in RuntimeConfig to
+    override, or ``sim_params`` to run on calibrated
+    :class:`~repro.core.costmodel.SCCParams`.
     """
 
     def __init__(self, graph, scheduler, *, n_workers: int = 4,
@@ -94,7 +166,7 @@ class SimExecutor(ExecutorBase):
         self.scheduler = scheduler
         self.n_workers = n_workers
         self.mpb_slots = mpb_slots
-        self.cost_fn = cost_fn or self._footprint_cost
+        self.cost_fn = cost_fn or FlopcountCost()
         self.params = params or SCCParams()
         self.pending = []
         self.last_result: SimResult | None = None
@@ -104,12 +176,13 @@ class SimExecutor(ExecutorBase):
 
     @staticmethod
     def _footprint_cost(td) -> tuple[float, float]:
-        """Default per-task cost: bytes = the whole footprint, flops =
-        2 x elements touched (a BLAS-1-ish density; pass ``sim_cost_fn``
-        in RuntimeConfig for kernel-accurate numbers).  A custom cost_fn
-        receives the full descriptor — including ``td.values``, the
-        firstprivate parameters — so per-task costs can depend on index
-        values (e.g. trailing-submatrix size in a factorization)."""
+        """Footprint-only estimate: bytes = the whole footprint, flops =
+        2 x elements touched (a BLAS-1-ish density).  This is the
+        fallback :class:`FlopcountCost` uses for bodies that cannot be
+        abstractly traced.  A custom cost_fn receives the full descriptor
+        — including ``td.values``, the firstprivate parameters — so
+        per-task costs can depend on index values (e.g. trailing-submatrix
+        size in a factorization)."""
         total_bytes = sum(m.region.nbytes for m in td.args)
         elems = sum(int(np.prod(m.region.shape)) for m in td.args)
         return 2.0 * elems, float(total_bytes)

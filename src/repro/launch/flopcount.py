@@ -103,6 +103,17 @@ def analyze_jaxpr(jaxpr, *, shard_devices: int = 1) -> dict:
                         if hasattr(v, "aval"))
             byts += sum(_aval_bytes(v.aval) for v in eqn.outvars)
             continue
+        if prim == "fft":
+            # 5 n log2(n) flops per length-n transform (radix-2 butterfly
+            # count), batched over the non-transformed dims; matters for
+            # the sim executor's cost of the paper's row-FFT tasks
+            n_t = math.prod(int(d) for d in eqn.params["fft_lengths"])
+            out_size = sum(_aval_size(v.aval) for v in eqn.outvars)
+            flops += 5.0 * out_size * max(math.log2(max(n_t, 2)), 1.0)
+            byts += sum(_aval_bytes(v.aval) for v in eqn.invars
+                        if hasattr(v, "aval"))
+            byts += sum(_aval_bytes(v.aval) for v in eqn.outvars)
+            continue
         if prim == "shard_map":
             inner = analyze_jaxpr(eqn.params["jaxpr"],
                                   shard_devices=shard_devices)

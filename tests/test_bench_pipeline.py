@@ -1,0 +1,226 @@
+"""The machine-readable benchmark pipeline: BENCH JSON schema validation,
+the regression gate's direction rules, and the committed baseline staying
+a valid, gate-consumable artifact."""
+import copy
+import importlib.util
+import json
+import pathlib
+
+import pytest
+
+import sys
+sys.path.insert(0, ".")
+from benchmarks.run import SCHEMA, SUITES  # noqa: E402
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _load_gate():
+    spec = importlib.util.spec_from_file_location(
+        "bench_gate", ROOT / "tools" / "bench_gate.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.fixture(scope="module")
+def gate():
+    return _load_gate()
+
+
+def _minimal_doc():
+    return {
+        "schema": SCHEMA,
+        "suite": "smoke",
+        "wall_s": 1.0,
+        "env": {"python": "3.11.0", "jax": "0.4.37"},
+        "calibration": {"dram_base_cycles": 256.0},
+        "entries": [
+            {"id": "app/matmul", "kind": "app", "info": {"wall_s": 0.5},
+             "metrics": {"tasks": 64, "sim_predicted_s": 0.016,
+                         "cross_home_bytes": 196608,
+                         "grouped_dispatches": 4}},
+            {"id": "scalability/matmul", "kind": "scalability",
+             "checkpoints": [{"workers": 1, "speedup": 1.0}],
+             "info": {}, "metrics": {"speedup_w43": 29.0}},
+        ],
+        "validation": {"checks": {"ok": True}, "passed": 1, "total": 1},
+    }
+
+
+class TestSchema:
+    def test_minimal_doc_is_valid(self, gate):
+        assert gate.validate_schema(_minimal_doc()) == []
+
+    @pytest.mark.parametrize("mutate, expect", [
+        (lambda d: d.update(schema="nope"), "schema"),
+        (lambda d: d.pop("suite"), "suite"),
+        (lambda d: d.pop("calibration"), "calibration"),
+        (lambda d: d.pop("validation"), "validation"),
+        (lambda d: d.update(entries=[]), "entries"),
+        (lambda d: d["entries"][0].pop("id"), "id"),
+        (lambda d: d["entries"][0].pop("metrics"), "metrics"),
+        (lambda d: d["entries"][0]["metrics"].update(bad=True),
+         "not a finite"),
+        (lambda d: d["entries"][0]["metrics"].update(bad=float("nan")),
+         "not a finite"),
+        (lambda d: d["entries"][1].update(id="app/matmul"), "duplicate"),
+    ])
+    def test_broken_docs_are_flagged(self, gate, mutate, expect):
+        doc = _minimal_doc()
+        mutate(doc)
+        problems = gate.validate_schema(doc)
+        assert problems and any(expect in p for p in problems), problems
+
+
+class TestDirectionRules:
+    def test_rules(self, gate):
+        assert gate._rule("speedup_w43") == "lower_is_worse"
+        assert gate._rule("peak_speedup") == "lower_is_worse"
+        assert gate._rule("sim_predicted_s") == "higher_is_worse"
+        assert gate._rule("cross_home_bytes") == "higher_is_worse"
+        assert gate._rule("idle_frac") == "higher_is_worse"
+        assert gate._rule("busy_cv") == "higher_is_worse"
+        assert gate._rule("tasks") == "two_sided"
+        assert gate._rule("fig4_32_vs_1") == "two_sided"
+        # single-MC pathology metrics are determinism checks: drift in
+        # either direction means the contention model changed
+        assert gate._rule("speedup_single_mc") == "two_sided"
+        assert gate._rule("sim_predicted_single_mc_s") == "two_sided"
+
+    def test_weakened_contention_model_trips_the_gate(self, gate):
+        """A model change that erodes the single-MC pathology (single-MC
+        speedup *rising*) must fail, not pass as an 'improvement'."""
+        doc = _minimal_doc()
+        doc["entries"][1]["metrics"]["speedup_single_mc"] = 1.7
+        new = copy.deepcopy(doc)
+        new["entries"][1]["metrics"]["speedup_single_mc"] = 4.0
+        (p,) = gate.compare(doc, new)
+        assert p["metric"] == "speedup_single_mc"
+        assert p["rule"] == "two_sided"
+
+
+class TestCompare:
+    def test_identical_docs_pass(self, gate):
+        doc = _minimal_doc()
+        assert gate.compare(doc, copy.deepcopy(doc)) == []
+
+    def test_within_threshold_passes(self, gate):
+        doc = _minimal_doc()
+        new = copy.deepcopy(doc)
+        new["entries"][0]["metrics"]["sim_predicted_s"] *= 1.15
+        new["entries"][1]["metrics"]["speedup_w43"] *= 0.85
+        assert gate.compare(doc, new) == []
+
+    def test_slower_prediction_regresses(self, gate):
+        doc = _minimal_doc()
+        new = copy.deepcopy(doc)
+        new["entries"][0]["metrics"]["sim_predicted_s"] *= 1.5
+        (p,) = gate.compare(doc, new)
+        assert p["metric"] == "sim_predicted_s"
+        assert p["rule"] == "higher_is_worse"
+
+    def test_faster_prediction_is_fine(self, gate):
+        doc = _minimal_doc()
+        new = copy.deepcopy(doc)
+        new["entries"][0]["metrics"]["sim_predicted_s"] *= 0.5
+        assert gate.compare(doc, new) == []
+
+    def test_speedup_drop_regresses_rise_does_not(self, gate):
+        doc = _minimal_doc()
+        worse, better = copy.deepcopy(doc), copy.deepcopy(doc)
+        worse["entries"][1]["metrics"]["speedup_w43"] *= 0.5
+        better["entries"][1]["metrics"]["speedup_w43"] *= 1.5
+        assert gate.compare(doc, worse)
+        assert gate.compare(doc, better) == []
+
+    def test_count_drift_is_two_sided(self, gate):
+        doc = _minimal_doc()
+        for factor in (0.5, 2.0):
+            new = copy.deepcopy(doc)
+            new["entries"][0]["metrics"]["tasks"] = int(64 * factor)
+            (p,) = gate.compare(doc, new)
+            assert p["rule"] == "two_sided"
+
+    def test_zero_baseline_flags_any_nonzero(self, gate):
+        doc = _minimal_doc()
+        doc["entries"][0]["metrics"]["cross_home_bytes"] = 0
+        new = copy.deepcopy(doc)
+        new["entries"][0]["metrics"]["cross_home_bytes"] = 1024
+        assert gate.compare(doc, new)
+
+    def test_disappearing_entry_and_metric_regress(self, gate):
+        doc = _minimal_doc()
+        new = copy.deepcopy(doc)
+        del new["entries"][1]
+        assert any(p["rule"] == "entry disappeared"
+                   for p in gate.compare(doc, new))
+        new = copy.deepcopy(doc)
+        del new["entries"][0]["metrics"]["tasks"]
+        assert any(p["rule"] == "metric disappeared"
+                   for p in gate.compare(doc, new))
+
+    def test_new_entries_pass_until_blessed(self, gate):
+        doc = _minimal_doc()
+        new = copy.deepcopy(doc)
+        new["entries"].append({"id": "app/extra", "kind": "app",
+                               "info": {}, "metrics": {"tasks": 1}})
+        assert gate.compare(doc, new) == []
+
+    def test_suite_mismatch_refuses(self, gate):
+        doc = _minimal_doc()
+        new = copy.deepcopy(doc)
+        new["suite"] = "paper"
+        (p,) = gate.compare(doc, new)
+        assert p["metric"] == "suite"
+
+    def test_threshold_is_tunable(self, gate):
+        doc = _minimal_doc()
+        new = copy.deepcopy(doc)
+        new["entries"][0]["metrics"]["sim_predicted_s"] *= 1.15
+        assert gate.compare(doc, new, threshold=0.10)
+        assert gate.compare(doc, new, threshold=0.20) == []
+
+
+class TestCommittedBaseline:
+    """The committed baseline must stay a valid artifact the CI gate can
+    consume, and must describe the suite the CI bench job actually runs."""
+
+    BASELINE = ROOT / "benchmarks" / "BASELINE_BENCH.json"
+
+    def test_baseline_exists_and_is_schema_valid(self, gate):
+        assert self.BASELINE.is_file(), \
+            "benchmarks/BASELINE_BENCH.json missing — run " \
+            "`python -m benchmarks.run --suite smoke --emit BENCH_4.json`" \
+            " then `python tools/bench_gate.py BENCH_4.json --update`"
+        doc = json.loads(self.BASELINE.read_text())
+        assert gate.validate_schema(doc) == []
+        assert doc["suite"] == "smoke"
+
+    def test_baseline_covers_all_apps_and_sweeps(self, gate):
+        doc = json.loads(self.BASELINE.read_text())
+        ids = {e["id"] for e in doc["entries"]}
+        for app in ("black_scholes", "matmul", "fft", "jacobi",
+                    "cholesky"):
+            assert f"app/{app}" in ids
+            assert f"scalability/{app}" in ids
+        assert "granularity" in ids and "microbench" in ids
+
+    def test_baseline_validation_was_green(self):
+        doc = json.loads(self.BASELINE.read_text())
+        assert doc["validation"]["passed"] == doc["validation"]["total"]
+
+
+class TestSuiteProfiles:
+    def test_profiles_declare_every_knob(self):
+        for name, cfg in SUITES.items():
+            assert {"worker_counts", "workload_sizes", "granularity",
+                    "app_sizes", "app_workers",
+                    "paper_ranges"} <= set(cfg), name
+
+    def test_smoke_is_smaller_than_paper(self):
+        smoke = SUITES["smoke"]
+        assert smoke["workload_sizes"]["matmul"]["n"] < 1024
+        assert smoke["app_sizes"]["matmul"]["n"] < 256
+        assert not smoke["paper_ranges"]
+        assert SUITES["paper"]["paper_ranges"]

@@ -31,6 +31,27 @@ def test_no_broken_intra_repo_links():
         f"  {f}: {target}" for f, target in bad)
 
 
+def test_file_line_anchors_are_checked(tmp_path):
+    """check_links validates `file.py:line` anchors: missing files and
+    out-of-range line numbers fail, valid anchors (full path or bare
+    basename) pass."""
+    checker = _load_checker()
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "docs" / "ARCHITECTURE.md").write_text(
+        "bare basename anchor: `x.py:3`", encoding="utf-8")
+    (tmp_path / "README.md").write_text(
+        "good `tools/x.py:2`, missing `gone.py:5`, stale `x.py:99`, "
+        "and fenced ones never count:\n```\n`fenced.py:1`\n```\n",
+        encoding="utf-8")
+    (tmp_path / "tools").mkdir()
+    (tmp_path / "tools" / "x.py").write_text("a\nb\nc\n", encoding="utf-8")
+
+    msgs = [t for _, t in checker.check_anchors(tmp_path)]
+    assert any("`gone.py:5`" in m and "no such file" in m for m in msgs)
+    assert any("`x.py:99`" in m and "out of range" in m for m in msgs)
+    assert len(msgs) == 2, msgs        # the valid + fenced anchors pass
+
+
 def test_readme_documents_every_executor():
     """Every executor the runtime registers must appear in the README's
     executor table (and nothing in the table may be stale)."""

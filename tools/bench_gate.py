@@ -1,0 +1,205 @@
+"""CI gate over BENCH JSON artifacts (schema ``bddt-scc-bench/1``).
+
+``benchmarks.run --emit`` produces a machine-readable benchmark document
+(specified in docs/BENCHMARKS.md); this tool validates its schema and
+diffs every entry's ``metrics`` against the committed baseline:
+
+* metrics whose name contains ``speedup`` regress when they *drop* more
+  than the threshold;
+* metrics ending in ``_s``/``_us`` or containing ``bytes``/``frac``/``cv``
+  regress when they *grow* more than the threshold;
+* everything else — task/dispatch counts, model shape ratios, and any
+  ``single_mc`` pathology metric (whose job is to stay *bad*) — is a
+  determinism check: any drift beyond the threshold in either direction
+  fails, because it means the suite or model itself changed and the
+  baseline must be regenerated deliberately (``--update``).
+
+Only deterministic quantities live under ``metrics`` (DES predictions,
+dependence/dispatch counts, home-traffic bytes); wall-clock measurements
+ride in each entry's ``info`` block and are never gated, so the gate
+cannot flake on runner noise.
+
+    python tools/bench_gate.py BENCH_4.json
+    python tools/bench_gate.py BENCH_4.json --update     # bless new numbers
+
+On first run (no baseline committed yet) the artifact is copied to the
+baseline path and the gate passes — commit the file to arm the gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import pathlib
+import sys
+
+SCHEMA = "bddt-scc-bench/1"
+DEFAULT_BASELINE = "benchmarks/BASELINE_BENCH.json"
+DEFAULT_THRESHOLD = 0.20
+
+
+# ---------------------------------------------------------------------------
+def validate_schema(doc) -> list[str]:
+    """Return a list of schema problems (empty = valid)."""
+    bad: list[str] = []
+    if not isinstance(doc, dict):
+        return ["document is not a JSON object"]
+    if doc.get("schema") != SCHEMA:
+        bad.append(f"schema is {doc.get('schema')!r}, expected {SCHEMA!r}")
+    if not isinstance(doc.get("suite"), str):
+        bad.append("missing/non-string 'suite'")
+    if not isinstance(doc.get("calibration"), dict):
+        bad.append("missing 'calibration' object")
+    val = doc.get("validation")
+    if not (isinstance(val, dict) and isinstance(val.get("checks"), dict)
+            and isinstance(val.get("passed"), int)
+            and isinstance(val.get("total"), int)):
+        bad.append("missing/malformed 'validation' "
+                   "{checks, passed, total}")
+    entries = doc.get("entries")
+    if not isinstance(entries, list) or not entries:
+        return bad + ["missing/empty 'entries' list"]
+    seen: set[str] = set()
+    for i, e in enumerate(entries):
+        where = f"entries[{i}]"
+        if not isinstance(e, dict):
+            bad.append(f"{where}: not an object")
+            continue
+        eid = e.get("id")
+        if not isinstance(eid, str) or not eid:
+            bad.append(f"{where}: missing string 'id'")
+        elif eid in seen:
+            bad.append(f"{where}: duplicate id {eid!r}")
+        else:
+            seen.add(eid)
+        if not isinstance(e.get("kind"), str):
+            bad.append(f"{where}: missing string 'kind'")
+        metrics = e.get("metrics")
+        if not isinstance(metrics, dict):
+            bad.append(f"{where}: missing 'metrics' object")
+            continue
+        for k, v in metrics.items():
+            if isinstance(v, bool) or not isinstance(v, (int, float)) \
+                    or not math.isfinite(v):
+                bad.append(f"{where}: metric {k!r} is not a finite "
+                           f"number ({v!r})")
+    return bad
+
+
+# ---------------------------------------------------------------------------
+def _rule(metric: str) -> str:
+    # single-MC pathology metrics measure how *bad* the contended
+    # placement is — drift in either direction means the cost model
+    # changed (e.g. weakened contention eroding the striped-beats-single
+    # margin), so they are determinism checks, not perf directions
+    if "single_mc" in metric:
+        return "two_sided"
+    if "speedup" in metric:
+        return "lower_is_worse"
+    if metric.endswith(("_s", "_us")) or "bytes" in metric \
+            or "frac" in metric or "cv" in metric:
+        return "higher_is_worse"
+    return "two_sided"
+
+
+def _regressed(rule: str, base: float, new: float, thr: float) -> bool:
+    if base == 0:
+        return abs(new) > 1e-12
+    if rule == "lower_is_worse":
+        return new < base * (1.0 - thr)
+    if rule == "higher_is_worse":
+        return new > base * (1.0 + thr)
+    return abs(new - base) > thr * abs(base)
+
+
+def compare(baseline: dict, new: dict,
+            threshold: float = DEFAULT_THRESHOLD) -> list[dict]:
+    """Every regression of ``new`` against ``baseline`` (empty = pass).
+
+    A baseline entry or metric missing from ``new`` is itself a
+    regression (the suite silently shrank); entries/metrics that are new
+    in ``new`` pass — they will be gated once the baseline is updated.
+    """
+    problems: list[dict] = []
+    if baseline.get("suite") != new.get("suite"):
+        return [{"id": "<doc>", "metric": "suite",
+                 "base": baseline.get("suite"), "new": new.get("suite"),
+                 "rule": "suites must match"}]
+    new_by_id = {e["id"]: e for e in new["entries"]}
+    for be in baseline["entries"]:
+        ne = new_by_id.get(be["id"])
+        if ne is None:
+            problems.append({"id": be["id"], "metric": "<entry>",
+                             "base": "present", "new": "missing",
+                             "rule": "entry disappeared"})
+            continue
+        for metric, base in be["metrics"].items():
+            if metric not in ne["metrics"]:
+                problems.append({"id": be["id"], "metric": metric,
+                                 "base": base, "new": "missing",
+                                 "rule": "metric disappeared"})
+                continue
+            val = ne["metrics"][metric]
+            rule = _rule(metric)
+            if _regressed(rule, float(base), float(val), threshold):
+                problems.append({"id": be["id"], "metric": metric,
+                                 "base": base, "new": val, "rule": rule})
+    return problems
+
+
+# ---------------------------------------------------------------------------
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="gate a BENCH artifact against the committed baseline")
+    ap.add_argument("artifact", help="BENCH JSON from benchmarks.run --emit")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help=f"baseline path (default {DEFAULT_BASELINE})")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="relative regression tolerance (default 0.20)")
+    ap.add_argument("--update", action="store_true",
+                    help="bless the artifact as the new baseline")
+    args = ap.parse_args(argv)
+
+    with open(args.artifact, encoding="utf-8") as f:
+        doc = json.load(f)
+    bad = validate_schema(doc)
+    if bad:
+        for b in bad:
+            print(f"SCHEMA: {b}")
+        print(f"{args.artifact}: FAIL, invalid {SCHEMA} document")
+        return 1
+
+    base_path = pathlib.Path(args.baseline)
+    if args.update or not base_path.exists():
+        base_path.parent.mkdir(parents=True, exist_ok=True)
+        base_path.write_text(json.dumps(doc, indent=1, sort_keys=True)
+                             + "\n", encoding="utf-8")
+        verb = "updated" if args.update else "created (first run)"
+        print(f"{base_path}: baseline {verb} from {args.artifact} — "
+              "commit it to arm the gate")
+        return 0
+
+    with open(base_path, encoding="utf-8") as f:
+        baseline = json.load(f)
+    bad = validate_schema(baseline)
+    if bad:
+        for b in bad:
+            print(f"BASELINE SCHEMA: {b}")
+        print(f"{base_path}: FAIL, invalid baseline — regenerate with "
+              "--update")
+        return 1
+
+    problems = compare(baseline, doc, args.threshold)
+    for p in problems:
+        print(f"REGRESSION {p['id']} :: {p['metric']} "
+              f"[{p['rule']}] baseline={p['base']} new={p['new']}")
+    n_meta = sum(len(e["metrics"]) for e in baseline["entries"])
+    verdict = f"FAIL, {len(problems)} regression(s)" if problems else "ok"
+    print(f"compared {n_meta} metric(s) across "
+          f"{len(baseline['entries'])} entries at ±{args.threshold:.0%}: "
+          f"{verdict}")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

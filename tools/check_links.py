@@ -8,6 +8,14 @@ silently.  External links (http/https/mailto) and pure-fragment anchors
 are skipped; fenced code blocks are stripped first so example snippets
 never count.  ``tests/test_docs.py`` runs the same check in tier-1.
 
+Inline-code ``file.py:line`` anchors (the entry-point pointers in
+docs/ARCHITECTURE.md's paper-to-code map) are validated too: the named
+file must exist somewhere in the repo (anchors use basenames or short
+suffix paths — every file whose path ends with the anchor is a
+candidate) and the line number must be in range for at least one
+candidate, so moving an entry point without refreshing its anchor fails
+the docs job instead of rotting.
+
     python tools/check_links.py [repo_root]
 """
 from __future__ import annotations
@@ -20,8 +28,11 @@ import sys
 # leading '#' are filtered below.  Images (![alt](src)) match too, which
 # is what we want.
 _LINK = re.compile(r"\[[^\]]*\]\(\s*<?([^)#\s>]+)(#[^)\s>]*)?>?\s*\)")
+# `path/to/file.py:123` in inline code — the file:line entry-point anchors
+_ANCHOR = re.compile(r"`([\w][\w./-]*\.[A-Za-z]\w*):(\d+)`")
 _FENCE = re.compile(r"```.*?```", re.DOTALL)
 _SCHEMES = ("http://", "https://", "mailto:", "ftp://")
+_SKIP_DIRS = {".git", "__pycache__", ".venv", "node_modules"}
 
 # the documentation layer that must exist at all (a missing file is a
 # broken link from everywhere)
@@ -36,8 +47,57 @@ def doc_files(root: pathlib.Path) -> list[pathlib.Path]:
     return files
 
 
+def _file_index(root: pathlib.Path) -> dict[str, list[pathlib.Path]]:
+    """basename -> repo files, from one walk (anchors resolve against it
+    so per-anchor lookups never re-scan the tree)."""
+    index: dict[str, list[pathlib.Path]] = {}
+    for p in root.rglob("*"):
+        if p.is_file() and not any(d in p.parts for d in _SKIP_DIRS):
+            index.setdefault(p.name, []).append(p)
+    return index
+
+
+def _anchor_candidates(root: pathlib.Path, target: str,
+                       index: dict) -> list[pathlib.Path]:
+    """Repo files an anchor like ``sim.py`` / ``dist/__init__.py`` can
+    name: exact path from the root, or any file whose path ends with the
+    anchor (anchors use basenames for brevity)."""
+    suffix = "/" + target.lstrip("/")
+    return [p for p in index.get(target.rsplit("/", 1)[-1], [])
+            if p == root / target or str(p).endswith(suffix)]
+
+
+def check_anchors(root: pathlib.Path) -> list[tuple[pathlib.Path, str]]:
+    """(file, problem) pairs for every ``file:line`` anchor naming a
+    missing file or an out-of-range line number."""
+    bad: list[tuple[pathlib.Path, str]] = []
+    index = _file_index(root)
+    n_lines: dict[pathlib.Path, int] = {}
+    for f in doc_files(root):
+        if not f.is_file():
+            continue
+        text = _FENCE.sub("", f.read_text(encoding="utf-8"))
+        for m in _ANCHOR.finditer(text):
+            target, line = m.group(1), int(m.group(2))
+            cands = _anchor_candidates(root, target, index)
+            if not cands:
+                bad.append((f, f"anchor `{target}:{line}`: no such file"))
+                continue
+            for p in cands:
+                if p not in n_lines:
+                    n_lines[p] = len(
+                        p.read_text(encoding="utf-8").splitlines())
+            if line < 1 or not any(line <= n_lines[p] for p in cands):
+                where = ", ".join(
+                    f"{p.relative_to(root)} has {n_lines[p]} lines"
+                    for p in cands)
+                bad.append((f, f"anchor `{target}:{line}` out of range "
+                               f"({where})"))
+    return bad
+
+
 def check(root: pathlib.Path) -> list[tuple[pathlib.Path, str]]:
-    """Return (file, target) pairs for every broken link."""
+    """Return (file, target) pairs for every broken link or anchor."""
     bad: list[tuple[pathlib.Path, str]] = []
     for rel in REQUIRED:
         if not (root / rel).is_file():
@@ -52,6 +112,7 @@ def check(root: pathlib.Path) -> list[tuple[pathlib.Path, str]]:
                 continue
             if not (f.parent / target).resolve().exists():
                 bad.append((f, target))
+    bad.extend(check_anchors(root))
     return bad
 
 
