@@ -74,8 +74,9 @@ def runtime_stats_table(entries: list[tuple[str, RuntimeStats]]) -> str:
     from blocks homed away from its output's device; '-' under executors
     that do not place)."""
     rows = ["| app | tasks | deps | waves | grouped | spawn us/task | "
-            "barrier s | waits (region/future) | xfer cross/local MiB |",
-            "|---|---|---|---|---|---|---|---|---|"]
+            "barrier s | waits (region/future) | xfer cross/local MiB | "
+            "moves | staged B |",
+            "|---|---|---|---|---|---|---|---|---|---|---|"]
     for label, s in entries:
         rows.append(
             f"| {label} | {s.tasks_spawned} | {s.deps_found} | "
@@ -83,7 +84,9 @@ def runtime_stats_table(entries: list[tuple[str, RuntimeStats]]) -> str:
             f"{s.grouped_dispatches if s.grouped_dispatches is not None else '-'} | "
             f"{s.spawn_us_per_task:.1f} | {s.barrier_time_s:.3f} | "
             f"{s.region_waits}/{s.futures_resolved} | "
-            f"{_fmt_mib(s.cross_home_bytes)}/{_fmt_mib(s.local_home_bytes)} |")
+            f"{_fmt_mib(s.cross_home_bytes)}/{_fmt_mib(s.local_home_bytes)} | "
+            f"{s.tile_moves if s.tile_moves is not None else '-'} | "
+            f"{s.bytes_staged if s.bytes_staged is not None else '-'} |")
     return "\n".join(rows)
 
 
@@ -111,15 +114,21 @@ def bench_table(doc: dict) -> str:
                f"(fit err {100 * c['fig3_max_rel_err']:.1f}% / "
                f"{100 * c['fig4_max_rel_err']:.1f}%)")
     out.append("\n| app | tasks | grouped | sim predicted s | "
-               "single-MC s | cross-home MiB | staged wall s |")
-    out.append("|---|---|---|---|---|---|---|")
+               "single-MC s | cross-home MiB | staged B | tile moves | "
+               "overrides | staged wall s |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|")
     for e in by_kind.get("app", []):
         m, i = e["metrics"], e["info"]
+        # residency columns: measured staging (gated at zero), measured
+        # mesh moves, and — when the owner override ran — spill counts
         out.append(
             f"| {e['id'].split('/', 1)[1]} | {m['tasks']} | "
             f"{m['grouped_dispatches']} | {m['sim_predicted_s']:.4f} | "
             f"{m['sim_predicted_single_mc_s']:.4f} | "
             f"{_fmt_mib(m['cross_home_bytes'])} | "
+            f"{m.get('bytes_staged', '-')} | "
+            f"{m.get('tile_moves', '-')} | "
+            f"{m.get('owner_overrides', '-')} | "
             f"{i['wall_s_staged']:.2f} |")
     out.append("\n| workload | peak speedup | speedup@last | single-MC |")
     out.append("|---|---|---|---|")

@@ -50,6 +50,7 @@ SUITES: dict = {
         },
         "app_workers": 8,
         "paper_ranges": False,
+        "owner_skew": 0.0,              # override off in the CI profile
     },
     "paper": {
         "worker_counts": None,          # paper_suite.WORKER_COUNTS
@@ -58,6 +59,9 @@ SUITES: dict = {
         "app_sizes": {},                # apps.py defaults
         "app_workers": 8,
         "paper_ranges": True,
+        # the paper suite reports striped vs striped+override: spill when
+        # one home owns > 1.5x the mean wave load
+        "owner_skew": 1.5,
     },
 }
 
@@ -95,12 +99,31 @@ def runtime_overheads(report) -> dict:
     return {"spawn_us": spawn_us, "blocks_walked_per_task": blocks_per_task}
 
 
-def app_entries(cfg: dict, report, sim_params=None) -> list[dict]:
+def _bench_mesh():
+    """A mesh over *every* local device (identical to
+    ``dist.single_device_mesh()`` when there is one).  The CI bench jobs
+    force 2 host devices via ``XLA_FLAGS``, so the sharded app runs
+    measure real cross-device residency — ``tile_moves`` counts actual
+    transfers and the ``no_operand_staging`` check can genuinely fail if
+    a dispatch path ever stages operands again."""
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+
+    return Mesh(np.asarray(jax.devices()), ("data",))
+
+
+def app_entries(cfg: dict, report, sim_params=None,
+                owner_skew: float = 0.0) -> list[dict]:
     """The five paper apps as real task programs: staged (wall time +
-    dispatch counts), sharded on the single-device mesh (deterministic
-    cross-home traffic of the striped placement), and sim twice — striped
-    and single placement — predicting SCC time on ``sim_params`` (the
-    calibrated model when called from :func:`build_bench`)."""
+    dispatch counts), sharded on a mesh over all local devices
+    (deterministic cross-home traffic of the striped placement plus the
+    measured residency counters — ``bytes_staged`` must stay 0), and sim
+    twice — striped and single placement — predicting SCC time on
+    ``sim_params`` (the calibrated model when called from
+    :func:`build_bench`).  With ``owner_skew > 0`` each app runs sharded
+    once more with the contention-aware owner override, so the artifact
+    reports striped vs striped+override side by side."""
     from repro import dist
     from .apps import APPS, run_app
 
@@ -111,7 +134,7 @@ def app_entries(cfg: dict, report, sim_params=None) -> list[dict]:
         t0 = time.perf_counter()
         staged = run_app(name, "staged", app_kwargs=kw, n_workers=workers)
         wall_staged = time.perf_counter() - t0
-        with dist.use_mesh(dist.single_device_mesh()):
+        with dist.use_mesh(_bench_mesh()):
             sharded = run_app(name, "sharded", app_kwargs=kw,
                               n_workers=workers)
         sim = run_app(name, "sim", app_kwargs=kw, n_workers=workers,
@@ -122,38 +145,63 @@ def app_entries(cfg: dict, report, sim_params=None) -> list[dict]:
         report(f"app_{name}", "sim_predicted_s", sim.predicted_total_s)
         report(f"app_{name}", "cross_home_MiB",
                round(sharded.cross_home_bytes / 2**20, 3))
+        report(f"app_{name}", "bytes_staged", sharded.bytes_staged)
+        metrics = {
+            "tasks": staged.tasks_spawned,
+            "deps": staged.deps_found,
+            "waves": staged.waves,
+            "grouped_dispatches": staged.grouped_dispatches,
+            "cross_home_bytes": sharded.cross_home_bytes,
+            "local_home_bytes": sharded.local_home_bytes,
+            # residency: measured at the memory layer.  bytes_staged is
+            # gated at zero (any staging hop regresses); tile_moves are
+            # the actual transfers on the bench mesh (CI forces 2 host
+            # devices, so these are real cross-device moves) and the
+            # sim's predicted cross-home fetches carry the footprint view
+            "bytes_staged": sharded.bytes_staged,
+            "tile_moves": sharded.tile_moves,
+            "sim_tile_moves": sim.tile_moves,
+            "sim_predicted_s": sim.predicted_total_s,
+            "sim_predicted_single_mc_s": sim1.predicted_total_s,
+        }
+        info = {
+            "sizes": kw,
+            "n_workers": workers,
+            "wall_s_staged": wall_staged,
+            "spawn_us_per_task": staged.spawn_us_per_task,
+        }
+        if owner_skew > 0:
+            with dist.use_mesh(_bench_mesh()):
+                skewed = run_app(name, "sharded", app_kwargs=kw,
+                                 n_workers=workers,
+                                 owner_skew_threshold=owner_skew)
+            report(f"app_{name}", "owner_overrides", skewed.owner_overrides)
+            info["owner_skew_threshold"] = owner_skew
+            metrics["owner_overrides"] = skewed.owner_overrides
+            metrics["cross_home_bytes_skew"] = skewed.cross_home_bytes
         entries.append({
             "id": f"app/{name}",
             "kind": "app",
-            "info": {
-                "sizes": kw,
-                "n_workers": workers,
-                "wall_s_staged": wall_staged,
-                "spawn_us_per_task": staged.spawn_us_per_task,
-            },
-            "metrics": {
-                "tasks": staged.tasks_spawned,
-                "deps": staged.deps_found,
-                "waves": staged.waves,
-                "grouped_dispatches": staged.grouped_dispatches,
-                "cross_home_bytes": sharded.cross_home_bytes,
-                "local_home_bytes": sharded.local_home_bytes,
-                "sim_predicted_s": sim.predicted_total_s,
-                "sim_predicted_single_mc_s": sim1.predicted_total_s,
-            },
+            "info": info,
+            "metrics": metrics,
         })
     return entries
 
 
 def build_bench(suite: str, *, skip_roofline: bool = True,
-                report=_report) -> tuple[dict, bool]:
-    """Run the whole suite; returns (BENCH document, all checks passed)."""
+                report=_report,
+                owner_skew: float | None = None) -> tuple[dict, bool]:
+    """Run the whole suite; returns (BENCH document, all checks passed).
+    ``owner_skew`` overrides the suite's owner-override threshold (None =
+    the suite default: off for smoke, 1.5 for paper)."""
     import dataclasses
 
     from repro.core.calibrate import calibrate, validate_trends
     from . import granularity, microbench, paper_suite
 
     cfg = SUITES[suite]
+    if owner_skew is None:
+        owner_skew = cfg["owner_skew"]
     t_start = time.perf_counter()
 
     # 1. calibration: fit SCCParams to the paper's Fig 3/4 anchors and
@@ -175,7 +223,7 @@ def build_bench(suite: str, *, skip_roofline: bool = True,
     gran = granularity.run(report, p=p, **cfg["granularity"])
 
     # 3. the real @task programs (sim runs predict on the fitted model)
-    apps = app_entries(cfg, report, sim_params=p)
+    apps = app_entries(cfg, report, sim_params=p, owner_skew=owner_skew)
     over = runtime_overheads(report)
 
     entries: list[dict] = [{
@@ -255,6 +303,11 @@ def build_bench(suite: str, *, skip_roofline: bool = True,
         # granularity: the optimum is interior (too fine hits the master
         # bottleneck, too coarse starves workers)
         "granularity_interior_optimum": 0 < best < len(gran) - 1,
+        # residency: no app's sharded wave dispatches staged operand
+        # bytes through a non-home device (the ISSUE 5 acceptance bar)
+        "no_operand_staging": all(
+            e["metrics"]["bytes_staged"] == 0
+            for e in entries if e["kind"] == "app"),
     }
     if cfg["paper_ranges"]:
         checks.update({
@@ -308,10 +361,17 @@ def main(argv=None) -> None:
                     help="write the BENCH JSON document here")
     ap.add_argument("--skip-roofline", action="store_true",
                     help="skip reading dry-run artifacts")
+    ap.add_argument("--owner-skew", type=float, default=None,
+                    metavar="THRESHOLD",
+                    help="contention-aware owner override threshold for "
+                         "the sharded app runs (adds striped+override "
+                         "metrics; default: suite setting — off for "
+                         "smoke, 1.5 for paper)")
     args = ap.parse_args(argv)
 
     print("name,metric,value")
-    doc, ok = build_bench(args.suite, skip_roofline=args.skip_roofline)
+    doc, ok = build_bench(args.suite, skip_roofline=args.skip_roofline,
+                          owner_skew=args.owner_skew)
     if args.emit:
         with open(args.emit, "w", encoding="utf-8") as f:
             json.dump(doc, f, indent=1, sort_keys=True)

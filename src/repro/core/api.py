@@ -143,6 +143,12 @@ class RuntimeConfig:
     * ``policy``      — running-mode scheduling policy (§3.4).
     * ``placement`` / ``n_controllers`` — block -> memory-controller map;
       the sharded executor reuses the same homes as mesh-device homes.
+    * ``owner_skew_threshold`` — sharded executor: contention-aware owner
+      override (0 = off, the default).  When one home owns more than
+      ``threshold x mean`` of a wave group's tasks, the surplus spills to
+      the least-loaded home (``placement.rebalance_owners``), trading an
+      extra counted output transfer against serializing the wave behind
+      one home — the paper's Fig 4 contention, dodged at schedule time.
     * ``group_waves`` — staged/sharded executors: fuse identical tile
       tasks of a wavefront into one batched dispatch.
     * ``sim_cost_fn`` — "sim" executor: ``td -> (flops, bytes)``; the
@@ -164,6 +170,7 @@ class RuntimeConfig:
     policy: str = "round_robin"
     placement: str = "striped"
     n_controllers: int = 4
+    owner_skew_threshold: float = 0.0
     group_waves: bool = True
     seed: int = 0
     sim_cost_fn: Callable | None = None
@@ -181,6 +188,8 @@ class RuntimeConfig:
                     "n_controllers"):
             if getattr(self, fld) < 1:
                 raise ValueError(f"{fld} must be >= 1")
+        if self.owner_skew_threshold < 0:
+            raise ValueError("owner_skew_threshold must be >= 0 (0 = off)")
         return self
 
     def replace(self, **overrides) -> "RuntimeConfig":
@@ -223,6 +232,17 @@ class RuntimeStats:
     sharded_dispatches: int | None = None
     cross_home_bytes: int | None = None
     local_home_bytes: int | None = None
+    owner_overrides: int | None = None
+    # residency accounting, measured at the memory layer (``TileTraffic``)
+    # and shared by every executor: actual cross-device tile transfers,
+    # not footprint estimates.  ``bytes_staged`` counts bytes harmonized
+    # through a device nobody declared (the legacy staging hop) — the
+    # device-resident sharded path keeps it at zero.  Under the
+    # timing-only sim executor ``tile_moves`` is the DES's *predicted*
+    # count of cross-home block fetches for the same footprints.
+    tile_moves: int | None = None
+    bytes_moved: int | None = None
+    bytes_staged: int | None = None
     # sim executor
     predicted_total_s: float | None = None
 

@@ -6,6 +6,18 @@ the SCC's four memory controllers.  Here an array registered with the runtime
 becomes a :class:`BlockArray` — a grid of tiles.  Tiles are the dependence
 unit (``deps.py``), the scheduling-affinity unit (``scheduler.py``) and the
 placement unit (``placement.py``: tile -> "memory controller" / mesh device).
+
+Residency (§3.2/§5): tiles are held behind a :class:`TileStore` backend.
+The default :class:`HostTileStore` keeps plain uncommitted ``jnp`` arrays —
+the single-machine path.  :class:`DeviceTileStore` makes block *homes*
+physical: every tile is committed to the device serving its home
+(``placement.device_assignment``), writes re-commit to the home, and reads
+that cross devices are *actual* transfers — counted in the array's attached
+:class:`TileTraffic` so executors can report measured (not estimated)
+cross-home movement.  Assembly (``gather`` / ``Region.materialize``) is
+destination-aware: tiles are pulled directly onto the device that consumes
+them, never staged through an intermediate device — the paper's
+"avoid large core-to-core data transfers" rule applied to the mesh.
 """
 from __future__ import annotations
 
@@ -24,6 +36,11 @@ __all__ = [
     "Out",
     "InOut",
     "AccessMode",
+    "TileTraffic",
+    "TileStore",
+    "HostTileStore",
+    "DeviceTileStore",
+    "device_of",
 ]
 
 
@@ -31,28 +48,171 @@ def _ceil_div(a: int, b: int) -> int:
     return -(-a // b)
 
 
-def _same_device(tiles: list) -> list:
-    """``jnp.block``/``concatenate`` refuse operands committed to
-    different devices, which happens once a mesh executor leaves each
-    output tile on its owner (owner-computes); pull everything to the
-    first tile's device before assembling."""
-    devs = set()
+def device_of(x):
+    """The single device a *committed* jax array lives on, else None.
+
+    Uncommitted arrays (eager results on a single-device platform) have no
+    residency obligation — moving them is free in the residency model, so
+    they report None and are never charged as transfers.  Committedness
+    comes from the public ``jax.Array.committed`` property (private
+    ``_committed`` as a fallback for older releases); if neither exists,
+    a single-device array on a multi-device platform is conservatively
+    treated as committed, so mixed-device assembly harmonizes instead of
+    crashing inside ``jnp.block``/``stack``."""
+    if not isinstance(x, jax.Array):
+        return None
+    committed = getattr(x, "committed", None)
+    if committed is None:
+        committed = getattr(x, "_committed", None)
+    if committed is None:
+        committed = len(jax.devices()) > 1
+    if committed:
+        devs = x.devices()
+        if len(devs) == 1:
+            return next(iter(devs))
+    return None
+
+
+@dataclass
+class TileTraffic:
+    """Measured tile movement, charged at the memory layer where transfers
+    actually happen (executors read these into ``RuntimeStats``).
+
+    * ``tile_moves`` / ``bytes_moved`` — cross-device tile transfers with a
+      known destination (a consuming device or the tile's home).
+    * ``bytes_staged`` — bytes harmonized onto a device *nobody declared*:
+      the legacy mixed-device assembly that routes data through an
+      intermediate hop.  The device-resident executors keep this at zero;
+      a nonzero value means some path still stages.
+    * ``bytes_local`` — reads served in place on the requesting device.
+    """
+    tile_moves: int = 0
+    bytes_moved: int = 0
+    bytes_staged: int = 0
+    bytes_local: int = 0
+
+    def reset(self) -> None:
+        self.tile_moves = self.bytes_moved = 0
+        self.bytes_staged = self.bytes_local = 0
+
+
+def _majority_device(tiles: list):
+    """The committed device holding the most of ``tiles`` (deterministic
+    tie-break on device id), or None if nothing is committed."""
+    counts: dict = {}
     for t in tiles:
-        if hasattr(t, "devices"):
-            devs |= t.devices()
-    if len(devs) <= 1:
-        return tiles
-    target = next(iter(tiles[0].devices()))
-    return [jax.device_put(t, target) for t in tiles]
+        d = device_of(t)
+        if d is not None:
+            counts[d] = counts.get(d, 0) + 1
+    if not counts:
+        return None
+    return max(sorted(counts, key=lambda d: d.id),
+               key=lambda d: counts[d])
 
 
+def _pull_tiles(tiles: list, device, traffic: TileTraffic | None,
+                tile_nbytes: int, staged: bool = False) -> list:
+    """Bring every tile to ``device`` (None = the majority device, chosen
+    only when tiles are committed to *different* devices), charging the
+    attached traffic recorder.  One hop per off-destination tile — assembly
+    happens ON the destination, never via an intermediate device."""
+    if device is None:
+        devs = {device_of(t) for t in tiles} - {None}
+        if len(devs) <= 1:
+            return tiles                  # nothing to harmonize
+        device = _majority_device(tiles)
+    else:
+        staged = False                    # a declared destination is final
+    out = []
+    for t in tiles:
+        src = device_of(t)
+        if src == device:
+            if traffic is not None:
+                traffic.bytes_local += tile_nbytes
+            out.append(t)
+            continue
+        if src is not None and traffic is not None:
+            traffic.tile_moves += 1
+            traffic.bytes_moved += tile_nbytes
+            if staged:
+                traffic.bytes_staged += tile_nbytes
+        out.append(jax.device_put(t, device))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# tile storage backends
+class TileStore:
+    """Where a :class:`BlockArray`'s tiles physically live.
+
+    The base class is the host backend: a dict of plain (uncommitted) jnp
+    arrays, no residency obligations, no traffic accounting — exactly the
+    single-machine behavior every non-mesh executor wants.
+    """
+
+    traffic: TileTraffic | None = None
+
+    def __init__(self):
+        self._tiles: dict[tuple[int, ...], Any] = {}
+
+    def get(self, idx: tuple[int, ...]):
+        return self._tiles[idx]
+
+    def set(self, idx: tuple[int, ...], value) -> None:
+        self._tiles[idx] = value
+
+    def device_for(self, idx: tuple[int, ...]):
+        """The residency target of tile ``idx`` (None = host/uncommitted)."""
+        return None
+
+    def indices(self):
+        return self._tiles.keys()
+
+
+class HostTileStore(TileStore):
+    """Alias backend for readability: tiles as uncommitted host arrays."""
+
+
+class DeviceTileStore(TileStore):
+    """Device-resident tiles: every tile is committed to the device serving
+    its home (``devmap[home % ndev]``, from ``placement.device_assignment``).
+
+    Writes re-commit to the home device — a value produced elsewhere is one
+    direct transfer home (counted in ``traffic``); a value produced on the
+    home (owner-computes) commits in place.  This is what makes block homes
+    *real*: a multi-device wave reads each tile where it lives instead of
+    shipping everything through a staging device.
+    """
+
+    def __init__(self, array: "BlockArray", devmap: Sequence,
+                 traffic: TileTraffic | None = None):
+        super().__init__()
+        self.array = array
+        self.devmap = list(devmap)
+        self.traffic = traffic
+
+    def device_for(self, idx: tuple[int, ...]):
+        home = self.array.home.get(idx, 0)
+        return self.devmap[home % len(self.devmap)]
+
+    def set(self, idx: tuple[int, ...], value) -> None:
+        dest = self.device_for(idx)
+        src = device_of(value)
+        if src is not None and src != dest and self.traffic is not None:
+            self.traffic.tile_moves += 1
+            self.traffic.bytes_moved += self.array.tile_nbytes
+        self._tiles[idx] = jax.device_put(value, dest)
+
+
+# ---------------------------------------------------------------------------
 class BlockArray:
     """An N-D array stored as a grid of tiles (BDDT "blocks").
 
-    Tiles are held as individual ``jnp`` arrays so that tasks touch only the
+    Tiles are held behind a :class:`TileStore` so that tasks touch only the
     blocks in their declared footprint — the software analogue of the SCC's
     block allocator, where a task's footprint names exactly the DRAM blocks
-    it may access.
+    it may access.  Swapping the store (``use_store``) changes *where* the
+    tiles physically live without changing any program.
     """
 
     _next_id = itertools.count()
@@ -73,10 +233,37 @@ class BlockArray:
         self.grid = tuple(s // b for s, b in zip(self.shape, self.block_shape))
         self.array_id = next(BlockArray._next_id)
         self.name = name or f"arr{self.array_id}"
-        # tile index tuple -> jnp array of block_shape
-        self._tiles: dict[tuple[int, ...], Any] = {}
+        self._store: TileStore = HostTileStore()
         # tile index tuple -> home id (memory controller / device ordinal)
         self.home: dict[tuple[int, ...], int] = {}
+        # measured tile movement; the owning runtime attaches its recorder
+        self.traffic: TileTraffic | None = None
+
+    @property
+    def tile_nbytes(self) -> int:
+        return int(np.prod(self.block_shape)) * jnp.dtype(self.dtype).itemsize
+
+    # -- storage backend ---------------------------------------------------
+    @property
+    def store(self) -> TileStore:
+        return self._store
+
+    def use_store(self, store: TileStore) -> None:
+        """Swap the storage backend, migrating existing tiles.  Initial
+        placement is *not* charged as traffic — tiles are being homed, not
+        moved between consumers."""
+        old, self._store = self._store, store
+        saved, store.traffic = store.traffic, None
+        try:
+            for idx in list(old.indices()):
+                store.set(idx, old.get(idx))
+        finally:
+            store.traffic = saved
+
+    def tile_device(self, idx: tuple[int, ...]):
+        """The device the stored tile is actually committed to (None for
+        host/uncommitted tiles)."""
+        return device_of(self._store.get(idx))
 
     # -- construction -----------------------------------------------------
     @classmethod
@@ -85,7 +272,7 @@ class BlockArray:
         arr = jnp.asarray(arr)
         ba = cls(arr.shape, block_shape, arr.dtype, name=name)
         for idx in ba.block_indices():
-            ba._tiles[idx] = arr[ba._tile_slices(idx)]
+            ba._store.set(idx, arr[ba._tile_slices(idx)])
         return ba
 
     @classmethod
@@ -94,7 +281,7 @@ class BlockArray:
         ba = cls(shape, block_shape, dtype, name=name)
         tile = jnp.full(ba.block_shape, fill, dtype)
         for idx in ba.block_indices():
-            ba._tiles[idx] = tile
+            ba._store.set(idx, tile)
         return ba
 
     @classmethod
@@ -143,19 +330,25 @@ class BlockArray:
 
     # -- tile data access (used by the executors) ---------------------------
     def get_tile(self, idx: tuple[int, ...]):
-        return self._tiles[idx]
+        return self._store.get(idx)
 
     def set_tile(self, idx: tuple[int, ...], value) -> None:
         if tuple(value.shape) != self.block_shape:
             raise ValueError(
                 f"{self.name}{list(idx)}: tile shape {tuple(value.shape)} != "
                 f"block shape {self.block_shape}")
-        self._tiles[idx] = value
+        self._store.set(idx, value)
 
-    def gather(self):
-        """Assemble the full array from tiles (the read-back at a barrier)."""
+    def gather(self, device=None):
+        """Assemble the full array from tiles (the read-back at a barrier).
+
+        Mixed-device tiles are assembled *on the destination* — ``device``
+        if given, else the device already holding the most tiles — so each
+        off-destination tile moves exactly once (no staging hop through an
+        intermediate device)."""
         idxs = list(self.block_indices())
-        tiles = _same_device([self._tiles[idx] for idx in idxs])
+        tiles = _pull_tiles([self._store.get(idx) for idx in idxs], device,
+                            self.traffic, self.tile_nbytes)
         nested = np.empty(self.grid, dtype=object)
         for idx, tile in zip(idxs, tiles):
             nested[idx] = tile
@@ -169,7 +362,7 @@ class BlockArray:
         if arr.shape != self.shape:
             raise ValueError("scatter shape mismatch")
         for idx in self.block_indices():
-            self._tiles[idx] = arr[self._tile_slices(idx)]
+            self._store.set(idx, arr[self._tile_slices(idx)])
 
     def __repr__(self):
         return (f"BlockArray({self.name}, shape={self.shape}, "
@@ -201,12 +394,24 @@ class Region:
     def nbytes(self) -> int:
         return int(np.prod(self.shape)) * jnp.dtype(self.array.dtype).itemsize
 
-    def materialize(self):
-        """Assemble this region's tiles into one array (task input value)."""
+    def materialize(self, device=None):
+        """Assemble this region's tiles into one array (task input value).
+
+        ``device`` names the consuming device: tiles homed there are read
+        in place, every other tile is pulled directly onto it (one hop,
+        counted as a measured transfer).  Without a destination,
+        mixed-device tiles harmonize onto the majority device and the
+        moved bytes are charged as *staged* — the legacy double-hop the
+        device-resident executors avoid by always naming the consumer."""
         idxs = self.tile_indices
+        traffic = self.array.traffic
+        nbytes = self.array.tile_nbytes
         if len(idxs) == 1:
-            return self.array.get_tile(idxs[0])
-        tiles = _same_device([self.array.get_tile(i) for i in idxs])
+            [tile] = _pull_tiles([self.array.get_tile(idxs[0])], device,
+                                 traffic, nbytes, staged=True)
+            return tile
+        tiles = _pull_tiles([self.array.get_tile(i) for i in idxs], device,
+                            traffic, nbytes, staged=True)
         grid = tuple(len(r) for r in self.ranges)
         nested = np.empty(grid, dtype=object)
         # tile_indices and the position product enumerate in the same
@@ -219,7 +424,9 @@ class Region:
         return jnp.block(nested.tolist())
 
     def store(self, value) -> None:
-        """Split a produced value back into this region's tiles (task output)."""
+        """Split a produced value back into this region's tiles (task output).
+        Each tile commits wherever the array's store homes it — for a
+        device-resident store, tile-by-tile to the home device."""
         idxs = self.tile_indices
         if len(idxs) == 1:
             self.array.set_tile(idxs[0], value)

@@ -284,25 +284,52 @@ class StagedExecutor(ExecutorBase):
             jfn = self._jit[fn] = jax.jit(fn)
         return jfn
 
-    def _stack_group(self, group: list[TaskDescriptor],
-                     place: Callable | None = None) -> list:
-        """Stack each READS arg across the group, then the firstprivate
-        values as extra vmap operands — same function, different index
-        values, one compiled dispatch per wavefront.  ``place`` (if given)
-        maps each materialized operand before stacking; the sharded
-        executor uses it to pull tiles written on other devices onto a
-        common staging device."""
-        place = place or (lambda x: x)
-        ins = []
+    @staticmethod
+    def _pulls(group: list[TaskDescriptor]) -> list:
+        """One ``(element_shape, pull(i, device))`` pair per stacked
+        operand — READS args then firstprivate values, the canonical
+        stacking order shared by the staged and sharded dispatch paths.
+        ``pull(i, device)`` produces task ``i``'s operand assembled on
+        ``device`` (left in place when None, the plain staged path)."""
+        pulls = []
         for pos in range(len(group[0].args)):
             if not group[0].args[pos].READS:
                 continue
-            ins.append(jnp.stack(
-                [place(td.args[pos].region.materialize()) for td in group]))
+            pulls.append((
+                group[0].args[pos].region.shape,
+                lambda i, dev, p=pos:
+                    group[i].args[p].region.materialize(device=dev)))
         for pos in range(len(group[0].values)):
-            ins.append(jnp.stack(
-                [place(jnp.asarray(td.values[pos])) for td in group]))
-        return ins
+            pulls.append((
+                np.shape(group[0].values[pos]),
+                lambda i, dev, p=pos:
+                    jnp.asarray(group[i].values[p]) if dev is None
+                    else jax.device_put(jnp.asarray(group[i].values[p]),
+                                        dev)))
+        return pulls
+
+    def _stack_group(self, group: list[TaskDescriptor],
+                     device=None) -> list:
+        """Stack each READS arg across the group, then the firstprivate
+        values as extra vmap operands — same function, different index
+        values, one compiled dispatch per wavefront.  ``device`` (if
+        given) is the dispatch destination: each operand is assembled
+        *directly on it* (``Region.materialize(device=...)``), so tiles
+        resident on other devices move exactly once and nothing routes
+        through a staging device.  The sharded executor passes the owner
+        device here; the plain staged path leaves operands where they
+        are."""
+        return [jnp.stack([pull(i, device) for i in range(len(group))])
+                for _, pull in self._pulls(group)]
+
+    @staticmethod
+    def _assign_outputs(td: TaskDescriptor, vals: tuple) -> None:
+        """Commit one task's output values — the §3.5 store contract
+        shared by every batched path (regions first, captured outputs
+        after)."""
+        for mode, value in zip(td.outputs, vals):
+            mode.region.store(value)
+        td.output_values = vals
 
     def _store_group(self, group: list[TaskDescriptor], result) -> None:
         """Unstack one batched result back into the group's regions and
@@ -311,9 +338,8 @@ class StagedExecutor(ExecutorBase):
                                    group[0].name or group[0].tid)
         self.grouped_dispatches += 1
         for i, td in enumerate(group):
-            for mode, stacked in zip(td.outputs, result):
-                mode.region.store(stacked[i])
-            td.output_values = tuple(stacked[i] for stacked in result)
+            self._assign_outputs(
+                td, tuple(stacked[i] for stacked in result))
 
     def _run_group(self, group: list[TaskDescriptor]) -> None:
         fn = group[0].fn
@@ -361,20 +387,20 @@ class StagedExecutor(ExecutorBase):
         self.barrier()
 
 
-def _run_one(td: TaskDescriptor, jfn: Callable,
-             place: Callable | None = None) -> None:
-    """Run one task through a jitted function.  ``place`` (if given) maps
-    every operand before the call — the sharded executor passes a
-    device_put so jit, following its inputs, executes the body on the
-    task's owner device."""
+def _run_one(td: TaskDescriptor, jfn: Callable, device=None) -> None:
+    """Run one task through a jitted function.  ``device`` (if given) is
+    the execution destination: operands assemble directly on it, so jit,
+    following its inputs, executes the body on the task's owner device
+    and resident tiles are read in place."""
     td.state = TaskState.RUNNING
-    if place is None:
+    if device is None:
         in_vals = [a.region.materialize() for a in td.args if a.READS]
         values = td.values
     else:
-        in_vals = [place(a.region.materialize())
+        in_vals = [a.region.materialize(device=device)
                    for a in td.args if a.READS]
-        values = tuple(place(jnp.asarray(v)) for v in td.values)
+        values = tuple(jax.device_put(jnp.asarray(v), device)
+                       for v in td.values)
     with suspend_runtime_scope():        # tracing runs fn on this thread
         result = jfn(*in_vals, *values)
     outs = td.outputs

@@ -19,7 +19,7 @@ import numpy as np
 from .blocks import BlockArray
 
 __all__ = ["assign_homes", "PLACEMENTS", "home_histogram",
-           "device_assignment", "home_sharding"]
+           "device_assignment", "home_sharding", "rebalance_owners"]
 
 
 def _single(ba: BlockArray, n_homes: int) -> None:
@@ -60,6 +60,44 @@ def assign_homes(ba: BlockArray, policy: str = "striped",
         raise ValueError(f"unknown placement {policy!r}; "
                          f"one of {sorted(PLACEMENTS)}") from None
     return ba
+
+
+def rebalance_owners(owners, n_homes: int,
+                     skew_threshold: float) -> tuple[list[int], int]:
+    """Contention-aware owner override (§4.1–§4.2, generalized).
+
+    ``owners`` is one wave-group's owner home per task.  When the busiest
+    home's load exceeds ``skew_threshold`` times the mean wave load, tasks
+    spill one at a time from the hottest home to the least-loaded one —
+    trading an extra output transfer (the spilled task now writes home
+    across devices, which the memory layer counts) against serializing the
+    whole wave behind one controller, exactly the contention the paper's
+    Fig 4 measures.  ``skew_threshold <= 0`` disables the override.
+
+    Deterministic: ties break on the lowest home id and the latest task
+    spills first.  Returns ``(new_owners, n_spilled)``.
+    """
+    owners = [h % n_homes for h in owners]
+    if skew_threshold <= 0 or not owners:
+        return owners, 0
+    load = [0] * n_homes
+    for h in owners:
+        load[h] += 1
+    mean = len(owners) / n_homes
+    spilled = 0
+    while True:
+        hot = max(range(n_homes), key=lambda h: load[h])
+        cold = min(range(n_homes), key=lambda h: load[h])
+        if load[hot] <= skew_threshold * mean or load[hot] - load[cold] <= 1:
+            break
+        for i in range(len(owners) - 1, -1, -1):
+            if owners[i] == hot:
+                owners[i] = cold
+                load[hot] -= 1
+                load[cold] += 1
+                spilled += 1
+                break
+    return owners, spilled
 
 
 def home_histogram(ba: BlockArray, n_homes: int = 4) -> list[int]:

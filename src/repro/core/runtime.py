@@ -50,7 +50,7 @@ from typing import Callable, Sequence
 
 from .api import (RuntimeConfig, RuntimeStats, TaskFuture, _pop_runtime,
                   _push_runtime)
-from .blocks import AccessMode, BlockArray, Region
+from .blocks import AccessMode, BlockArray, Region, TileTraffic
 from .deps import DependenceAnalyzer
 from .executor import (Executor, HostExecutor, SequentialExecutor,
                        StagedExecutor)
@@ -82,6 +82,9 @@ class TaskRuntime:
         self.scheduler = MasterScheduler(self.queues, self.graph, self.pool,
                                          self.analyzer, policy=config.policy,
                                          seed=config.seed)
+        # measured tile movement (shared by every array this runtime
+        # registers; the memory layer charges it, stats() reports it)
+        self.traffic = TileTraffic()
         self._exec: Executor = self._make_executor(config)
         self._arrays: list[BlockArray] = []
         self._spawn_counter = 0
@@ -105,15 +108,27 @@ class TaskRuntime:
                                params=config.sim_params)
         if config.executor == "sharded":
             from .sharded import ShardedExecutor
-            return ShardedExecutor(self.graph, self.scheduler,
-                                   group=config.group_waves,
-                                   n_homes=config.n_controllers)
+            return ShardedExecutor(
+                self.graph, self.scheduler, group=config.group_waves,
+                n_homes=config.n_controllers,
+                owner_skew_threshold=config.owner_skew_threshold)
         return StagedExecutor(self.graph, self.scheduler,
                               group=config.group_waves)
 
     # -- memory management (§3.2): the custom allocator --------------------------
     def _register(self, ba: BlockArray) -> BlockArray:
+        """Assign homes, attach the runtime's traffic recorder, and — if
+        the executor wants residency (sharded under a mesh) — swap in the
+        store that places each tile on its home device.  After this,
+        ``from_array``/``zeros``/``full`` results physically live where
+        ``placement.device_assignment`` says they do."""
         assign_homes(ba, self.placement, self.n_controllers)
+        ba.traffic = self.traffic
+        make_store = getattr(self._exec, "make_store", None)
+        if make_store is not None:
+            store = make_store(ba)
+            if store is not None:
+                ba.use_store(store)
         self._arrays.append(ba)
         return ba
 
@@ -248,12 +263,22 @@ class TaskRuntime:
         if isinstance(self._exec, StagedExecutor):
             s.waves = self._exec.waves_run
             s.grouped_dispatches = self._exec.grouped_dispatches
+        # residency semantics are shared by all five executors: the
+        # measured movement comes from the memory layer's recorder (zero
+        # under executors that never place tiles on devices)
+        s.tile_moves = self.traffic.tile_moves
+        s.bytes_moved = self.traffic.bytes_moved
+        s.bytes_staged = self.traffic.bytes_staged
         # duck-typed (like last_result below) so the single-machine path
         # never imports the sharded module just to fill in stats
         if getattr(self._exec, "cross_home_bytes", None) is not None:
             s.sharded_dispatches = self._exec.sharded_dispatches
             s.cross_home_bytes = self._exec.cross_home_bytes
             s.local_home_bytes = self._exec.local_home_bytes
+            s.owner_overrides = self._exec.owner_overrides
         if getattr(self._exec, "last_result", None) is not None:
             s.predicted_total_s = self._exec.predicted_total_s
+            # the DES never executes bodies: tile_moves is its *predicted*
+            # count of cross-home block fetches, staging is always zero
+            s.tile_moves = self._exec.predicted_tile_moves
         return s

@@ -13,6 +13,20 @@ transfers — the mesh analogue of the remote-controller accesses the DES
 ``RuntimeStats`` (``cross_home_bytes`` / ``local_home_bytes``) so the
 benchmark tables can show what a placement policy saves.
 
+Residency: blocks are *device-resident*.  :meth:`ShardedExecutor.make_store`
+hands every registered ``BlockArray`` a
+:class:`~repro.core.blocks.DeviceTileStore`, so each tile physically lives
+on the device serving its home.  A grouped wave dispatch assembles every
+device's operand shard *on that device* (``Region.materialize(device=...)``
+inside :meth:`_sharded_stack`): tiles a task owns never move, a cross-home
+read transfers exactly once, and nothing routes through a staging device —
+``RuntimeStats.bytes_staged`` stays zero, and ``tile_moves``/``bytes_moved``
+report the transfers that actually happened (measured at the memory layer
+by :class:`~repro.core.blocks.TileTraffic`, not estimated from footprints).
+Results come back shard-by-shard (:meth:`_store_sharded` reads each task's
+output from the shard data on its executing device) and commit tile-by-tile
+to the output's home.
+
 Dispatch reuses the staged executor's wavefront grouping unchanged: tasks
 of one wavefront with the same function and footprint/value structure
 stack into one batched call.  With a mesh context active
@@ -24,15 +38,12 @@ evenly fall back to per-owner-device sub-dispatches, and with no mesh at
 all every dispatch degrades to the plain staged path on the default
 device — the single-device fallback tests and CI run.
 
-Multi-device note: tiles written by a dispatch stay committed to their
-owner's device.  A later wave's sharded operands are assembled per
-device — each device's shard is built on that device
-(``_sharded_stack``), so tiles a task owns never move and a cross-home
-read transfers once, matching the bytes this executor accounts.
-Mixed-device tile assembly elsewhere (multi-block
-``Region.materialize``, ``BlockArray.gather``) harmonizes devices first
-(``blocks._same_device``), so the whole program runs unchanged however
-many devices back the homes.
+When ``RuntimeConfig.owner_skew_threshold`` is set, a wave group whose
+owner loads are badly skewed is rebalanced before dispatch
+(:func:`~repro.core.placement.rebalance_owners`): surplus tasks of the
+hottest home spill to the least-loaded one, and the spilled task's output
+transfer home is charged for real by the device store — contention traded
+against one counted copy, the override the paper's Fig 4 numbers argue for.
 """
 from __future__ import annotations
 
@@ -43,9 +54,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from .api import suspend_runtime_scope
+from .blocks import DeviceTileStore
 from .executor import StagedExecutor, _run_one
-from .graph import TaskDescriptor, TaskState
-from .placement import device_assignment
+from .graph import TaskDescriptor, TaskState, normalize_outputs
+from .placement import device_assignment, rebalance_owners
 
 __all__ = ["ShardedExecutor", "owner_home"]
 
@@ -64,18 +76,32 @@ class ShardedExecutor(StagedExecutor):
     """Staged wavefronts, placed home-aware on the ambient device mesh."""
 
     def __init__(self, graph, scheduler, group: bool = True,
-                 n_homes: int = 4):
+                 n_homes: int = 4, owner_skew_threshold: float = 0.0):
         super().__init__(graph, scheduler, group=group)
         self.n_homes = n_homes
+        self.owner_skew_threshold = owner_skew_threshold
         self._smap: dict = {}           # (fn, mesh, n_ins) -> jitted hybrid
         self.sharded_dispatches = 0
         self.cross_home_bytes = 0
         self.local_home_bytes = 0
+        self.owner_overrides = 0
 
     # -- placement ----------------------------------------------------------
     def _mesh_ctx(self):
         from repro import dist
         return dist.current()
+
+    def make_store(self, ba):
+        """The runtime's residency hook: with a mesh active, give ``ba`` a
+        device-resident store so its tiles live on their home devices from
+        allocation onward (``from_array``/``zeros``/``full`` place each
+        tile per ``device_assignment``).  Without a mesh the host store
+        stays — the single-device fallback."""
+        ctx = self._mesh_ctx()
+        if ctx is None:
+            return None
+        return DeviceTileStore(ba, device_assignment(self.n_homes, ctx),
+                               traffic=ba.traffic)
 
     def _account(self, td: TaskDescriptor, owner: int) -> None:
         """Charge every footprint block against the owner home: blocks
@@ -83,7 +109,8 @@ class ShardedExecutor(StagedExecutor):
         controller contention), blocks at the owner are local.  The counts
         are policy-level — what owner-computes *must* move — independent
         of how many physical devices back the homes, so the single-device
-        fallback reports the same numbers a real mesh would."""
+        fallback reports the same numbers a real mesh would.  (The
+        *measured* movement lives in the runtime's ``TileTraffic``.)"""
         for m in td.args:
             arr = m.region.array
             block_bytes = (int(np.prod(arr.block_shape))
@@ -94,9 +121,17 @@ class ShardedExecutor(StagedExecutor):
                 else:
                     self.local_home_bytes += block_bytes
 
+    def _owners(self, group: list[TaskDescriptor]) -> list[int]:
+        owners = [owner_home(td) for td in group]
+        if self.owner_skew_threshold > 0:
+            owners, spilled = rebalance_owners(
+                owners, self.n_homes, self.owner_skew_threshold)
+            self.owner_overrides += spilled
+        return owners
+
     # -- dispatch -----------------------------------------------------------
     def _run_group(self, group: list[TaskDescriptor]) -> None:
-        owners = [owner_home(td) for td in group]
+        owners = self._owners(group)
         for td, h in zip(group, owners):
             self._account(td, h)
         ctx = self._mesh_ctx()
@@ -109,9 +144,7 @@ class ShardedExecutor(StagedExecutor):
         if len(group) == 1 or not self.group:
             jfn = self._jitted(group[0].fn)
             for td, h in zip(group, owners):
-                dev = devmap[h % len(devmap)]
-                _run_one(td, jfn,
-                         place=lambda x, d=dev: jax.device_put(x, d))
+                _run_one(td, jfn, device=devmap[h % len(devmap)])
             return
         # sort by owner device so the sharded task axis hands each device
         # (under balanced block-cyclic homes) exactly the tasks it owns
@@ -130,33 +163,44 @@ class ShardedExecutor(StagedExecutor):
                 self._run_subgroup_on(sub, dev)
 
     def _sharded_stack(self, group: list[TaskDescriptor],
-                       sharding) -> list:
+                       sharding) -> tuple[list, list]:
         """Assemble each stacked operand (READS args then firstprivate
         values, the staged stacking order) directly as a sharded global
-        array: every device's shard is built on that device — element
-        device_puts are no-ops for tiles the task already owns, and a
-        cross-home read moves once, matching the bytes ``_account``
-        charges (no staging-device double hop)."""
-        pulls = []
-        for pos in range(len(group[0].args)):
-            if group[0].args[pos].READS:
-                pulls.append(
-                    lambda td, p=pos: td.args[p].region.materialize())
-        for pos in range(len(group[0].values)):
-            pulls.append(lambda td, p=pos: jnp.asarray(td.values[p]))
+        array: every device's shard is built *on that device* by
+        destination-aware assembly — tiles resident there are read in
+        place, a cross-home tile transfers once, and no operand ever
+        routes through a staging device.  Returns ``(ins, slices)`` where
+        ``slices`` is the per-device ``(device, lo, hi)`` split of the
+        task axis (``_store_sharded`` reads results back along it)."""
         n = len(group)
+        slices = [(dev, *idx[0].indices(n)[:2])
+                  for dev, idx in sharding.devices_indices_map((n,)).items()]
         ins = []
-        for pull in pulls:
-            elts = [pull(td) for td in group]
-            shape = (n, *np.shape(elts[0]))
-            shards = []
-            for dev, idx in sharding.devices_indices_map(shape).items():
-                lo, hi, _ = idx[0].indices(n)     # the task-axis slice
-                shards.append(jnp.stack(
-                    [jax.device_put(x, dev) for x in elts[lo:hi]]))
+        for elt_shape, pull in self._pulls(group):
+            shards = [jnp.stack([pull(i, dev) for i in range(lo, hi)])
+                      for dev, lo, hi in slices]
             ins.append(jax.make_array_from_single_device_arrays(
-                shape, sharding, shards))
-        return ins
+                (n, *elt_shape), sharding, shards))
+        return ins, slices
+
+    def _store_sharded(self, group: list[TaskDescriptor], result,
+                       slices: list) -> None:
+        """Unstack a sharded result without cross-device gathers: each
+        output's per-device shard holds exactly the tasks that ran there,
+        so every task's value is read from the shard data already on its
+        executing device and committed tile-by-tile to its output's home
+        (a no-op when owner-computes held; one counted transfer when the
+        owner override spilled the task)."""
+        result = normalize_outputs(result, len(group[0].outputs),
+                                   group[0].name or group[0].tid)
+        self.grouped_dispatches += 1
+        shard_data = [{s.device: s.data for s in out.addressable_shards}
+                      for out in result]
+        for dev, lo, hi in slices:
+            for i in range(lo, hi):
+                self._assign_outputs(
+                    group[i],
+                    tuple(data[dev][i - lo] for data in shard_data))
 
     def _run_sharded(self, group: list[TaskDescriptor], mesh) -> None:
         """The shard_map/vmap hybrid: stacked operands are sharded along
@@ -168,7 +212,7 @@ class ShardedExecutor(StagedExecutor):
         for td in group:
             td.state = TaskState.RUNNING
         spec = P(tuple(mesh.axis_names))
-        ins = self._sharded_stack(group, NamedSharding(mesh, spec))
+        ins, slices = self._sharded_stack(group, NamedSharding(mesh, spec))
         key = (fn, mesh, len(ins))
         sfn = self._smap.get(key)
         if sfn is None:
@@ -179,20 +223,18 @@ class ShardedExecutor(StagedExecutor):
         with suspend_runtime_scope():    # tracing runs fn on this thread
             result = sfn(*ins)
         self.sharded_dispatches += 1
-        self._store_group(group, result)
+        self._store_sharded(group, result, slices)
 
     def _run_subgroup_on(self, group: list[TaskDescriptor], dev) -> None:
         """Batched vmap dispatch pinned to one owner device (the uneven-
         wave fallback; computation follows the placed operands)."""
         fn = group[0].fn
         if len(group) == 1:
-            _run_one(group[0], self._jitted(fn),
-                     place=lambda x: jax.device_put(x, dev))
+            _run_one(group[0], self._jitted(fn), device=dev)
             return
         for td in group:
             td.state = TaskState.RUNNING
-        ins = self._stack_group(group,
-                                place=lambda x: jax.device_put(x, dev))
+        ins = self._stack_group(group, device=dev)
         vfn = self._vjit.get(fn)
         if vfn is None:
             vfn = self._vjit[fn] = jax.jit(jax.vmap(fn))

@@ -37,6 +37,12 @@ class SimTask:
     homes: tuple[int, ...]            # MCs serving this task's blocks
     deps: tuple[int, ...] = ()        # tids this task waits for
     n_blocks: int = 1                 # footprint size (dep-analysis cost)
+    # actual footprint bytes behind each MC in ``homes`` (same order).
+    # None = split ``mem_bytes`` evenly (the synthetic-workload default);
+    # SimExecutor fills it from real task footprints so the contention
+    # model charges each controller for the bytes it really serves — the
+    # residency semantics the executors measure, consumed by the DES.
+    home_bytes: tuple[float, ...] | None = None
 
     # simulation state (reset per run)
     deps_remaining: int = 0
@@ -173,6 +179,10 @@ class SimExecutor(ExecutorBase):
         # fragments compose sequentially (each sync point serializes the
         # master), so the program's predicted makespan is their sum
         self.predicted_total_s = 0.0
+        # residency prediction: cross-home block fetches the footprints
+        # imply under owner-computes (the DES never stages data — 32-byte
+        # descriptors move through the MPBs, blocks stay at their homes)
+        self.predicted_tile_moves = 0
 
     @staticmethod
     def _footprint_cost(td) -> tuple[float, float]:
@@ -189,17 +199,28 @@ class SimExecutor(ExecutorBase):
 
     def _to_sim(self, td, batch_tids: set[int]) -> SimTask:
         flops, mem = self.cost_fn(td)
-        homes = set()
+        owner = 0
+        for m in td.args:
+            if m.WRITES:
+                owner = m.region.array.home.get(m.region.tile_indices[0], 0)
+                break
+        per_home: dict[int, float] = {}
         n_blocks = 0
         for m in td.args:
             n_blocks += len(m.region.block_ids)
+            block_bytes = m.region.nbytes / max(len(m.region.tile_indices), 1)
             for idx in m.region.tile_indices:
-                homes.add(m.region.array.home.get(idx, 0))
+                h = m.region.array.home.get(idx, 0)
+                per_home[h] = per_home.get(h, 0.0) + block_bytes
+                if m.READS and h != owner:
+                    self.predicted_tile_moves += 1
+        homes = tuple(sorted(per_home)) or (0,)
         return SimTask(
             tid=td.tid, flops=float(flops), mem_bytes=float(mem),
-            homes=tuple(sorted(homes)) or (0,),
+            homes=homes,
             deps=tuple(p.tid for p in td.preds if p.tid in batch_tids),
-            n_blocks=max(n_blocks, 1))
+            n_blocks=max(n_blocks, 1),
+            home_bytes=tuple(per_home.get(h, 0.0) for h in homes) or None)
 
     def on_spawn(self, td, ready: bool) -> None:
         self.pending.append(td)
@@ -272,17 +293,26 @@ def simulate(tasks: list[SimTask], n_workers: int,
     master_t = 0.0
     rr = 0
 
+    def mc_shares(task: SimTask) -> list[float]:
+        """Per-MC byte shares, aligned with ``task.homes``: the measured
+        footprint split when the task carries one, an even split else."""
+        if task.home_bytes and sum(task.home_bytes) > 0:
+            total = sum(task.home_bytes)
+            return [task.mem_bytes * b / total for b in task.home_bytes]
+        share = task.mem_bytes / max(len(task.homes), 1)
+        return [share] * len(task.homes)
+
     def exec_time(w: WorkerState, task: SimTask) -> tuple[float, float]:
         comp = p.compute_time_s(task.flops)
-        share = task.mem_bytes / max(len(task.homes), 1)
-        mem0 = sum(p.mem_time_s(share, w.mc_hops[mc], concurrent=1)
-                   for mc in task.homes)
+        shares = mc_shares(task)
+        mem0 = sum(p.mem_time_s(sh, w.mc_hops[mc], concurrent=1)
+                   for sh, mc in zip(shares, task.homes))
         f = mem0 / max(mem0 + comp, 1e-12)
         mem_frac[task.tid] = f
         mem = 0.0
-        for mc in task.homes:
+        for sh, mc in zip(shares, task.homes):
             conc = 1.0 + max(mc_active[mc], 0.0)   # others + me
-            mem += p.mem_time_s(share, w.mc_hops[mc], concurrent=conc)
+            mem += p.mem_time_s(sh, w.mc_hops[mc], concurrent=conc)
         fl = p.seconds(p.flush_cycles + p.invalidate_cycles)
         return comp + mem, fl
 

@@ -215,8 +215,15 @@ class TestSuiteProfiles:
     def test_profiles_declare_every_knob(self):
         for name, cfg in SUITES.items():
             assert {"worker_counts", "workload_sizes", "granularity",
-                    "app_sizes", "app_workers",
-                    "paper_ranges"} <= set(cfg), name
+                    "app_sizes", "app_workers", "paper_ranges",
+                    "owner_skew"} <= set(cfg), name
+
+    def test_owner_override_on_in_paper_profile_only(self):
+        """The paper suite reports striped vs striped+override; the CI
+        smoke profile keeps the override off so its baseline stays
+        minimal."""
+        assert SUITES["smoke"]["owner_skew"] == 0.0
+        assert SUITES["paper"]["owner_skew"] > 1.0
 
     def test_smoke_is_smaller_than_paper(self):
         smoke = SUITES["smoke"]
