@@ -67,17 +67,24 @@ def _fmt_mib(nbytes) -> str:
     return "-" if nbytes is None else f"{nbytes / 2**20:.2f}"
 
 
-def runtime_stats_table(entries: list[tuple[str, RuntimeStats]]) -> str:
-    """One row per (label, RuntimeStats), attribute access throughout —
-    feeds EXPERIMENTS.md §Runtime.  The transfer columns are the sharded
-    executor's owner-computes accounting (cross-home = bytes a task reads
-    from blocks homed away from its output's device; '-' under executors
-    that do not place)."""
+def runtime_stats_table(entries) -> str:
+    """One row per (label, stats), where stats is a
+    :class:`~repro.core.RuntimeStats` or its serialized dict/JSON form
+    (``RuntimeStats.to_dict``/``to_json`` — the same schema the tracker's
+    ``stats`` event carries), so trace post-processing feeds this table
+    without re-running anything — feeds EXPERIMENTS.md §Runtime.  The
+    transfer columns are the sharded executor's owner-computes accounting
+    (cross-home = bytes a task reads from blocks homed away from its
+    output's device; '-' under executors that do not place)."""
     rows = ["| app | tasks | deps | waves | grouped | spawn us/task | "
             "barrier s | waits (region/future) | xfer cross/local MiB | "
             "moves | staged B |",
             "|---|---|---|---|---|---|---|---|---|---|---|"]
     for label, s in entries:
+        if isinstance(s, str):
+            s = RuntimeStats.from_json(s)
+        elif isinstance(s, dict):
+            s = RuntimeStats.from_dict(s)
         rows.append(
             f"| {label} | {s.tasks_spawned} | {s.deps_found} | "
             f"{s.waves if s.waves is not None else '-'} | "
@@ -143,6 +150,12 @@ def bench_table(doc: dict) -> str:
                           for r in e["rows"])
         out.append(f"\ngranularity (tile→speedup): {sweep} "
                    f"(best: {e['info']['best_tile']})")
+    t = doc.get("timings")
+    if t:
+        staged = ", ".join(f"{app} {v:.2f}s"
+                           for app, v in sorted(t["staged_wall_s"].items()))
+        out.append(f"\nstaged wall times (informational, never gated): "
+                   f"{staged} · spawn {t['spawn_us_per_task']:.1f} us/task")
     return "\n".join(out)
 
 

@@ -26,6 +26,10 @@ import sys
 import time
 
 SCHEMA = "bddt-scc-bench/1"
+# the wall-time trend block: informational only, validated for shape by
+# tools/bench_gate.py but never regression-gated (wall times are noisy on
+# shared CI runners; the nightly series exists to eyeball trends)
+TIMINGS_SCHEMA = "bddt-scc-timings/1"
 
 # problem sizes per suite: "smoke" shrinks both the synthetic DES
 # workloads and the real app instances so the whole suite fits in a CI
@@ -114,7 +118,7 @@ def _bench_mesh():
 
 
 def app_entries(cfg: dict, report, sim_params=None,
-                owner_skew: float = 0.0) -> list[dict]:
+                owner_skew: float = 0.0, tracker=None) -> list[dict]:
     """The five paper apps as real task programs: staged (wall time +
     dispatch counts), sharded on a mesh over all local devices
     (deterministic cross-home traffic of the striped placement plus the
@@ -129,14 +133,16 @@ def app_entries(cfg: dict, report, sim_params=None,
 
     entries = []
     workers = cfg["app_workers"]
+    trk = {} if tracker is None else {"tracker": tracker}
     for name in sorted(APPS):
         kw = cfg["app_sizes"].get(name, {})
         t0 = time.perf_counter()
-        staged = run_app(name, "staged", app_kwargs=kw, n_workers=workers)
+        staged = run_app(name, "staged", app_kwargs=kw, n_workers=workers,
+                         **trk)
         wall_staged = time.perf_counter() - t0
         with dist.use_mesh(_bench_mesh()):
             sharded = run_app(name, "sharded", app_kwargs=kw,
-                              n_workers=workers)
+                              n_workers=workers, **trk)
         sim = run_app(name, "sim", app_kwargs=kw, n_workers=workers,
                       sim_params=sim_params)
         sim1 = run_app(name, "sim", app_kwargs=kw, n_workers=workers,
@@ -190,10 +196,14 @@ def app_entries(cfg: dict, report, sim_params=None,
 
 def build_bench(suite: str, *, skip_roofline: bool = True,
                 report=_report,
-                owner_skew: float | None = None) -> tuple[dict, bool]:
+                owner_skew: float | None = None,
+                trace: str | None = None) -> tuple[dict, bool]:
     """Run the whole suite; returns (BENCH document, all checks passed).
     ``owner_skew`` overrides the suite's owner-override threshold (None =
-    the suite default: off for smoke, 1.5 for paper)."""
+    the suite default: off for smoke, 1.5 for paper).  ``trace`` writes a
+    JSONL wave trace of the staged and sharded app runs there (the CI
+    artifact; open it with ``python -m repro.obs summary`` or export to
+    Chrome via ``python -m repro.obs chrome``)."""
     import dataclasses
 
     from repro.core.calibrate import calibrate, validate_trends
@@ -223,7 +233,17 @@ def build_bench(suite: str, *, skip_roofline: bool = True,
     gran = granularity.run(report, p=p, **cfg["granularity"])
 
     # 3. the real @task programs (sim runs predict on the fitted model)
-    apps = app_entries(cfg, report, sim_params=p, owner_skew=owner_skew)
+    tracker = None
+    if trace:
+        from repro.obs import JsonlTracker
+        tracker = JsonlTracker(trace)
+    try:
+        apps = app_entries(cfg, report, sim_params=p,
+                           owner_skew=owner_skew, tracker=tracker)
+    finally:
+        if tracker is not None:
+            tracker.close()
+            report("trace", "events", tracker.records_written)
     over = runtime_overheads(report)
 
     entries: list[dict] = [{
@@ -345,6 +365,17 @@ def build_bench(suite: str, *, skip_roofline: bool = True,
         "env": {"python": platform.python_version(), "jax": jax_version},
         "calibration": cal.as_dict(),
         "entries": entries,
+        # informational wall-time trends (TIMINGS_SCHEMA): shape-validated
+        # by bench_gate but never diffed against a baseline
+        "timings": {
+            "schema": TIMINGS_SCHEMA,
+            "suite": suite,
+            "suite_wall_s": wall,
+            "staged_wall_s": {
+                e["id"].split("/", 1)[1]: e["info"]["wall_s_staged"]
+                for e in entries if e["kind"] == "app"},
+            "spawn_us_per_task": over["spawn_us"],
+        },
         "validation": {"checks": {k: bool(v) for k, v in checks.items()},
                        "passed": ok, "total": len(checks),
                        "roofline": roofline_note},
@@ -367,11 +398,14 @@ def main(argv=None) -> None:
                          "the sharded app runs (adds striped+override "
                          "metrics; default: suite setting — off for "
                          "smoke, 1.5 for paper)")
+    ap.add_argument("--trace", metavar="PATH",
+                    help="write a JSONL wave trace of the staged/sharded "
+                         "app runs (repro.obs event schema)")
     args = ap.parse_args(argv)
 
     print("name,metric,value")
     doc, ok = build_bench(args.suite, skip_roofline=args.skip_roofline,
-                          owner_skew=args.owner_skew)
+                          owner_skew=args.owner_skew, trace=args.trace)
     if args.emit:
         with open(args.emit, "w", encoding="utf-8") as f:
             json.dump(doc, f, indent=1, sort_keys=True)

@@ -89,8 +89,14 @@ def main():
                   f"{s.region_waits} region waits -> result verified")
 
     # firstprivate values: one function, per-task shift amounts — the
-    # staged executor batches all g tasks into a single vmap dispatch
-    with TaskRuntime(executor="staged") as rt:
+    # staged executor batches all g tasks into a single vmap dispatch.
+    # tracker="console" turns on the observability layer (repro.obs):
+    # every wave emits open/close events with dispatch wall time and
+    # measured tile movement, summarized on stdout at shutdown — swap in
+    # "jsonl:trace.jsonl" to capture the full timeline instead (then
+    # `python -m repro.obs chrome trace.jsonl -o trace.json` renders it
+    # for chrome://tracing or https://ui.perfetto.dev)
+    with TaskRuntime(executor="staged", tracker="console") as rt:
         X = rt.from_array(a, (tile, n), name="X")
         Y = rt.zeros((n, n), (tile, n), name="Y")
         for r in range(g):

@@ -65,7 +65,7 @@ from .blocks import AccessMode, BlockArray, In, InOut, Out, Region
 from .graph import TaskDescriptor
 
 __all__ = ["task", "TaskFn", "TaskFuture", "RuntimeConfig", "RuntimeStats",
-           "current_runtime"]
+           "STATS_SCHEMA", "current_runtime"]
 
 
 # ---------------------------------------------------------------------------
@@ -162,6 +162,18 @@ class RuntimeConfig:
       :class:`~repro.core.costmodel.SCCParams` the DES runs on; None
       means the uncalibrated defaults (``repro.core.calibrate.calibrate``
       produces a fitted instance).
+    * ``tracker`` — the observability sink (``repro.obs``): None (off,
+      the default — zero event overhead), a spec string (``"memory"``,
+      ``"console"``, ``"jsonl"``, ``"jsonl:PATH"``) or a ready
+      ``Tracker`` instance (caller-owned, shareable across runtimes).
+      Every executor reports the same per-wave event schema through it.
+    * ``profile_waves`` — wrap each staged/sharded wave dispatch in a
+      ``jax.profiler.TraceAnnotation`` so device profiles name waves.
+    * ``worker_cache_tiles`` — host executor: per-worker pinned tile
+      cache capacity (entries of assembled region operands, validated by
+      tile identity; 0 disables).  Hit/miss counters surface in
+      ``RuntimeStats.worker_cache_hits/misses`` and as ``tile_cache``
+      tracker events.
     """
     executor: str = "host"
     n_workers: int = 4
@@ -175,6 +187,9 @@ class RuntimeConfig:
     seed: int = 0
     sim_cost_fn: Callable | None = None
     sim_params: object | None = None
+    tracker: object | None = None
+    profile_waves: bool = False
+    worker_cache_tiles: int = 64
 
     def validate(self) -> "RuntimeConfig":
         from .scheduler import POLICIES
@@ -190,6 +205,15 @@ class RuntimeConfig:
                 raise ValueError(f"{fld} must be >= 1")
         if self.owner_skew_threshold < 0:
             raise ValueError("owner_skew_threshold must be >= 0 (0 = off)")
+        if self.worker_cache_tiles < 0:
+            raise ValueError("worker_cache_tiles must be >= 0 (0 = off)")
+        if isinstance(self.tracker, str):
+            from repro.obs.tracker import validate_spec
+            validate_spec(self.tracker)
+        elif self.tracker is not None and \
+                not hasattr(self.tracker, "emit"):
+            raise ValueError("tracker must be a spec string, a Tracker "
+                             "instance, or None")
         return self
 
     def replace(self, **overrides) -> "RuntimeConfig":
@@ -198,6 +222,9 @@ class RuntimeConfig:
 
 # ---------------------------------------------------------------------------
 # statistics
+STATS_SCHEMA = "bddt-scc-stats/1"
+
+
 @dataclass
 class RuntimeStats:
     """Typed runtime instrumentation (was: an ad-hoc ``stats()`` dict;
@@ -222,6 +249,10 @@ class RuntimeStats:
     # host executor
     worker_busy_s: list[float] | None = None
     worker_tasks: list[int] | None = None
+    # host executor: per-worker pinned tile-cache counters (None unless
+    # the host executor ran; all-zero hits when the cache is disabled)
+    worker_cache_hits: list[int] | None = None
+    worker_cache_misses: list[int] | None = None
     # staged / sharded executors
     waves: int | None = None
     grouped_dispatches: int | None = None
@@ -249,6 +280,39 @@ class RuntimeStats:
     def as_dict(self) -> dict:
         return {k: v for k, v in dataclasses.asdict(self).items()
                 if v is not None}
+
+    # -- the stable serialization schema (``bddt-scc-stats/1``) ----------
+    # One schema shared by ``to_json``, the tracker's ``stats`` event
+    # payload (``ConsoleTracker`` summarizes it), and the benchmark
+    # report's table input — so consumers stop reaching into attributes
+    # ad hoc and a field rename is a schema decision, not an accident.
+    def to_dict(self) -> dict:
+        """The schema-tagged dict (None fields dropped; absent = None on
+        the way back in, so the round-trip is exact)."""
+        return {"schema": STATS_SCHEMA, **self.as_dict()}
+
+    def to_json(self) -> str:
+        import json
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "RuntimeStats":
+        d = dict(d)
+        schema = d.pop("schema", None)
+        if schema != STATS_SCHEMA:
+            raise ValueError(f"stats schema is {schema!r}, "
+                             f"expected {STATS_SCHEMA!r}")
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(d) - known)
+        if unknown:
+            raise ValueError(f"unknown RuntimeStats fields {unknown} "
+                             f"(schema {STATS_SCHEMA})")
+        return cls(**d)
+
+    @classmethod
+    def from_json(cls, s: str) -> "RuntimeStats":
+        import json
+        return cls.from_dict(json.loads(s))
 
     @property
     def spawn_us_per_task(self) -> float:

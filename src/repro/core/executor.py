@@ -20,12 +20,15 @@ from __future__ import annotations
 
 import threading
 import time
-from collections import defaultdict
+from collections import OrderedDict, defaultdict
 from typing import Callable, Iterable, Protocol, Sequence, runtime_checkable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs.profiler import trace_span
+from repro.obs.tracker import NULL_TRACKER
 
 from .api import suspend_runtime_scope
 from .graph import TaskDescriptor, TaskGraph, TaskState, normalize_outputs
@@ -85,7 +88,21 @@ def dependence_cone(targets: Iterable[TaskDescriptor]) -> set[TaskDescriptor]:
 
 
 class ExecutorBase:
-    """Shared defaults for :class:`Executor` implementations."""
+    """Shared defaults for :class:`Executor` implementations.
+
+    Observability: the runtime hands every executor the tracker it owns
+    (``obs``), its traffic recorder (``traffic``) and the profiler flag
+    (``profile``) right after construction — class-level defaults keep
+    executors constructed standalone (tests, the DES) working with zero
+    event overhead.  Hot paths guard event construction on
+    ``obs.enabled``, so the default ``NULL_TRACKER`` never even builds
+    an event dict.
+    """
+
+    kind = "base"                 # the ``executor`` field of emitted events
+    obs = NULL_TRACKER            # set by TaskRuntime.__init__
+    traffic = None                # the runtime's TileTraffic recorder
+    profile = False               # RuntimeConfig.profile_waves
 
     def on_spawn(self, td: TaskDescriptor, ready: bool) -> None:
         raise NotImplementedError
@@ -112,6 +129,8 @@ class SequentialExecutor(ExecutorBase):
     order is a topological order of the dependence DAG by construction, so
     every dependence is satisfied."""
 
+    kind = "sequential"
+
     def __init__(self, graph: TaskGraph, scheduler: MasterScheduler):
         self.graph = graph
         self.scheduler = scheduler
@@ -136,15 +155,47 @@ class SequentialExecutor(ExecutorBase):
 class _Worker(threading.Thread):
     """A worker core: drains its MPB ring, executes tasks, marks slots
     completed (§3.5).  Cache invalidate/flush fences around the task body
-    are no-ops on coherent CPython (charged for real in the DES)."""
+    are no-ops on coherent CPython (charged for real in the DES).
 
-    def __init__(self, wid: int, queue: MPBQueue):
+    Pinned tile cache: each worker keeps up to ``cache_tiles`` assembled
+    READS operands, keyed by region identity and validated by the
+    *identity* of the constituent tile objects (jax arrays are immutable
+    and the store swaps in a new object on every write, so object
+    identity is exact freshness; the cached entry pins its tiles, ruling
+    out id reuse).  A hit skips region reassembly — the SCC analogue of
+    a worker keeping hot tiles resident in its own memory slice."""
+
+    def __init__(self, wid: int, queue: MPBQueue, cache_tiles: int = 0):
         super().__init__(name=f"bddt-worker-{wid}", daemon=True)
         self.wid = wid
         self.queue = queue
         self.stop_flag = threading.Event()
         self.busy_s = 0.0
         self.tasks_run = 0
+        self.cache_tiles = cache_tiles
+        self.cache_hits = 0
+        self.cache_misses = 0
+        # region key -> (pinned tile objects, assembled value), LRU order
+        self._cache: OrderedDict = OrderedDict()
+
+    def _materialize(self, region):
+        if not self.cache_tiles:
+            return region.materialize()
+        key = (region.array.array_id, region.ranges)
+        tiles = tuple(region.array.get_tile(i) for i in region.tile_indices)
+        hit = self._cache.get(key)
+        if hit is not None and len(hit[0]) == len(tiles) and \
+                all(a is b for a, b in zip(hit[0], tiles)):
+            self.cache_hits += 1
+            self._cache.move_to_end(key)
+            return hit[1]
+        self.cache_misses += 1
+        value = region.materialize()
+        self._cache[key] = (tiles, value)
+        self._cache.move_to_end(key)
+        while len(self._cache) > self.cache_tiles:
+            self._cache.popitem(last=False)
+        return value
 
     def run(self) -> None:
         while not self.stop_flag.is_set():
@@ -154,7 +205,7 @@ class _Worker(threading.Thread):
             td.state = TaskState.RUNNING
             t0 = time.perf_counter()
             # read fence (L2 invalidate) | task body | write fence (L2 flush)
-            td.run()
+            td.run(materialize=self._materialize)
             self.busy_s += time.perf_counter() - t0
             self.tasks_run += 1
             self.queue.mark_completed(td)
@@ -163,12 +214,16 @@ class _Worker(threading.Thread):
 class HostExecutor(ExecutorBase):
     """The paper's runtime: master = the spawning host thread."""
 
+    kind = "host"
+
     def __init__(self, graph: TaskGraph, scheduler: MasterScheduler,
-                 queues: list[MPBQueue]):
+                 queues: list[MPBQueue], cache_tiles: int = 0):
         self.graph = graph
         self.scheduler = scheduler
         self.queues = queues
-        self.workers = [_Worker(q.worker_id, q) for q in queues]
+        self._cache_reported = False
+        self.workers = [_Worker(q.worker_id, q, cache_tiles=cache_tiles)
+                        for q in queues]
         for w in self.workers:
             w.start()
 
@@ -206,6 +261,11 @@ class HostExecutor(ExecutorBase):
             w.stop_flag.set()
         for w in self.workers:
             w.join(timeout=2.0)
+        if self.obs.enabled and not self._cache_reported:
+            self._cache_reported = True
+            for w in self.workers:
+                self.obs.emit("tile_cache", worker=w.wid,
+                              hits=w.cache_hits, misses=w.cache_misses)
 
 
 # ---------------------------------------------------------------------------
@@ -223,6 +283,8 @@ class StagedExecutor(ExecutorBase):
     mesh.
     """
 
+    kind = "staged"
+
     def __init__(self, graph: TaskGraph, scheduler: MasterScheduler,
                  group: bool = True):
         self.graph = graph
@@ -233,6 +295,9 @@ class StagedExecutor(ExecutorBase):
         self._jit: dict[Callable, Callable] = {}
         self.waves_run = 0
         self.grouped_dispatches = 0
+        self._dispatches = 0           # all dispatch events this executor
+        self._wave_id = 0              # current wave (event correlation)
+        self._last_mode = "jit"        # how the last group dispatched
 
     def on_spawn(self, td: TaskDescriptor, ready: bool) -> None:
         self.pending.append(td)
@@ -354,9 +419,43 @@ class StagedExecutor(ExecutorBase):
         vfn = self._vjit.get(fn)
         if vfn is None:
             vfn = self._vjit[fn] = jax.jit(jax.vmap(fn))
+        self._last_mode = "vmap"
         with suspend_runtime_scope():    # tracing runs fn on this thread
             result = vfn(*ins)
         self._store_group(group, result)
+
+    # -- wave instrumentation -------------------------------------------------
+    def _traffic_snapshot(self) -> tuple[int, int, int]:
+        t = self.traffic
+        if t is None:
+            return (0, 0, 0)
+        return (t.tile_moves, t.bytes_moved, t.bytes_staged)
+
+    def _enqueue_wave(self, wave: list[TaskDescriptor]) -> None:
+        """Account a staged wave as queued work; the staged path has one
+        logical dispatch channel (0).  Sharded overrides per owner home."""
+        self.obs.queue(0, len(wave))
+
+    def _dequeue_group(self, group: list[TaskDescriptor]) -> None:
+        self.obs.queue(0, -len(group))
+
+    def _run_wave_group(self, group: list[TaskDescriptor]) -> None:
+        if not self.obs.enabled:
+            self._run_group(group)
+            return
+        # dequeue before dispatch so live depth means "queued, not yet
+        # dispatched" — the sharded rebalance reads it as background load
+        # and must not count the group it is placing
+        self._dequeue_group(group)
+        self._last_mode = "jit"
+        t0 = time.perf_counter()
+        self._run_group(group)
+        wall = time.perf_counter() - t0
+        self._dispatches += 1
+        td = group[0]
+        self.obs.emit("dispatch", wave=self._wave_id, executor=self.kind,
+                      fn=td.name or td.fn.__name__, tasks=len(group),
+                      mode=self._last_mode, wall_s=wall)
 
     def _run_waves(self, tasks: list[TaskDescriptor]) -> None:
         for wave in self._wavefronts(tasks):
@@ -364,8 +463,29 @@ class StagedExecutor(ExecutorBase):
             groups: dict = defaultdict(list)
             for td in wave:
                 groups[self._sig(td)].append(td)
-            for group in groups.values():
-                self._run_group(group)
+            if self.obs.enabled:
+                self._wave_id += 1
+                wid = self._wave_id
+                self.obs.emit("wave_open", wave=wid, executor=self.kind,
+                              tasks=len(wave), groups=len(groups))
+                self._enqueue_wave(wave)
+                moves0, moved0, staged0 = self._traffic_snapshot()
+                disp0 = self._dispatches
+                t0 = time.perf_counter()
+                with trace_span(f"bddt/{self.kind}/wave{wid}", self.profile):
+                    for group in groups.values():
+                        self._run_wave_group(group)
+                wall = time.perf_counter() - t0
+                moves1, moved1, staged1 = self._traffic_snapshot()
+                self.obs.emit("wave_close", wave=wid, executor=self.kind,
+                              tasks=len(wave), wall_s=wall,
+                              dispatches=self._dispatches - disp0,
+                              tile_moves=moves1 - moves0,
+                              bytes_moved=moved1 - moved0,
+                              bytes_staged=staged1 - staged0)
+            else:
+                for group in groups.values():
+                    self._run_group(group)
             for td in wave:
                 self.scheduler._collect(td)
         self.scheduler.release_all()

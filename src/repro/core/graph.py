@@ -81,7 +81,7 @@ class TaskDescriptor:
     def outputs(self) -> tuple[AccessMode, ...]:
         return tuple(a for a in self.args if a.WRITES)
 
-    def run(self) -> None:
+    def run(self, materialize=None) -> None:
         """Task execution (§3.5): call the task function on materialized
         inputs; store the returned values into the OUT/INOUT regions.
 
@@ -89,9 +89,16 @@ class TaskDescriptor:
         order, then the firstprivate values in parameter order, and must
         return one array per WRITES argument, in argument order (a single
         array if there is exactly one).
+
+        ``materialize`` (``region -> array``) overrides how READS regions
+        assemble — host workers pass their pinned tile cache's reader so
+        repeated reads of unchanged regions skip reassembly.
         """
         from .api import suspend_runtime_scope
-        in_vals = [a.region.materialize() for a in self.args if a.READS]
+        if materialize is None:
+            in_vals = [a.region.materialize() for a in self.args if a.READS]
+        else:
+            in_vals = [materialize(a.region) for a in self.args if a.READS]
         with suspend_runtime_scope():
             result = self.fn(*in_vals, *self.values)
         outs = self.outputs

@@ -62,17 +62,25 @@ def assign_homes(ba: BlockArray, policy: str = "striped",
     return ba
 
 
-def rebalance_owners(owners, n_homes: int,
-                     skew_threshold: float) -> tuple[list[int], int]:
+def rebalance_owners(owners, n_homes: int, skew_threshold: float,
+                     base_load=None) -> tuple[list[int], int]:
     """Contention-aware owner override (§4.1–§4.2, generalized).
 
     ``owners`` is one wave-group's owner home per task.  When the busiest
-    home's load exceeds ``skew_threshold`` times the mean wave load, tasks
+    home's load exceeds ``skew_threshold`` times the mean load, tasks
     spill one at a time from the hottest home to the least-loaded one —
     trading an extra output transfer (the spilled task now writes home
     across devices, which the memory layer counts) against serializing the
     whole wave behind one controller, exactly the contention the paper's
     Fig 4 measures.  ``skew_threshold <= 0`` disables the override.
+
+    ``base_load`` (one non-negative number per home) is background work
+    already queued behind each home — the tracker's live per-device queue
+    depth, fed back by the sharded executor — so the skew decision sees
+    what each controller is *actually* serving, not just this group.
+    Only this group's tasks can move: a home hot on background load alone
+    stops the spill loop.  ``None`` (or all zeros) reproduces the
+    wave-local behavior exactly.
 
     Deterministic: ties break on the lowest home id and the latest task
     spills first.  Returns ``(new_owners, n_spilled)``.
@@ -80,10 +88,20 @@ def rebalance_owners(owners, n_homes: int,
     owners = [h % n_homes for h in owners]
     if skew_threshold <= 0 or not owners:
         return owners, 0
-    load = [0] * n_homes
+    if base_load is None:
+        base = [0.0] * n_homes
+    else:
+        base = [float(b) for b in base_load]
+        if len(base) != n_homes:
+            raise ValueError(f"base_load needs one entry per home "
+                             f"({n_homes}), got {len(base)}")
+        if any(b < 0 for b in base):
+            raise ValueError("base_load entries must be >= 0")
+    wave = [0] * n_homes
     for h in owners:
-        load[h] += 1
-    mean = len(owners) / n_homes
+        wave[h] += 1
+    load = [b + w for b, w in zip(base, wave)]
+    mean = sum(load) / n_homes
     spilled = 0
     while True:
         hot = max(range(n_homes), key=lambda h: load[h])
@@ -97,6 +115,10 @@ def rebalance_owners(owners, n_homes: int,
                 load[cold] += 1
                 spilled += 1
                 break
+        else:
+            # the hot home's load is all background — nothing of this
+            # group's to move there; stop rather than spin
+            break
     return owners, spilled
 
 

@@ -85,7 +85,18 @@ class TaskRuntime:
         # measured tile movement (shared by every array this runtime
         # registers; the memory layer charges it, stats() reports it)
         self.traffic = TileTraffic()
+        # observability: one tracker per runtime, handed to the scheduler
+        # and the executor — the single emit point of the subsystem.
+        # ``owned`` sinks (built from a spec string) are closed at
+        # shutdown; caller-provided instances stay open for inspection.
+        from repro.obs.tracker import make_tracker
+        self.obs, self._obs_owned = make_tracker(config.tracker)
+        self._closed = False
+        self.scheduler.obs = self.obs
         self._exec: Executor = self._make_executor(config)
+        self._exec.obs = self.obs
+        self._exec.traffic = self.traffic
+        self._exec.profile = config.profile_waves
         self._arrays: list[BlockArray] = []
         self._spawn_counter = 0
         self.spawn_time_s = 0.0
@@ -98,7 +109,8 @@ class TaskRuntime:
         if config.executor == "sequential":
             return SequentialExecutor(self.graph, self.scheduler)
         if config.executor == "host":
-            return HostExecutor(self.graph, self.scheduler, self.queues)
+            return HostExecutor(self.graph, self.scheduler, self.queues,
+                                cache_tiles=config.worker_cache_tiles)
         if config.executor == "sim":
             from .sim import SimExecutor
             return SimExecutor(self.graph, self.scheduler,
@@ -216,7 +228,16 @@ class TaskRuntime:
         assert self.graph.quiescent
 
     def shutdown(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
         self._exec.shutdown()
+        if self.obs.enabled:
+            # the final stats snapshot, in the same schema to_json() emits
+            # — one source of truth for the console summary and reports
+            self.obs.emit("stats", stats=self.stats().to_dict())
+        if self._obs_owned:
+            self.obs.close()
 
     # -- the runtime scope --------------------------------------------------------------
     @contextlib.contextmanager
@@ -260,6 +281,9 @@ class TaskRuntime:
         if isinstance(self._exec, HostExecutor):
             s.worker_busy_s = [w.busy_s for w in self._exec.workers]
             s.worker_tasks = [w.tasks_run for w in self._exec.workers]
+            s.worker_cache_hits = [w.cache_hits for w in self._exec.workers]
+            s.worker_cache_misses = [w.cache_misses
+                                     for w in self._exec.workers]
         if isinstance(self._exec, StagedExecutor):
             s.waves = self._exec.waves_run
             s.grouped_dispatches = self._exec.grouped_dispatches

@@ -20,6 +20,8 @@ from __future__ import annotations
 import random
 from typing import Callable, Sequence
 
+from repro.obs.tracker import NULL_TRACKER
+
 from .deps import DependenceAnalyzer
 from .graph import DescriptorPool, TaskDescriptor, TaskGraph, TaskState
 from .mpb import MPBQueue
@@ -68,6 +70,8 @@ POLICIES: dict[str, Callable] = {
 class MasterScheduler:
     """Drives the four task stages over a set of per-worker MPB queues."""
 
+    obs = NULL_TRACKER     # set by TaskRuntime; channel = worker id
+
     def __init__(self, queues: list[MPBQueue], graph: TaskGraph,
                  pool: DescriptorPool, analyzer: DependenceAnalyzer,
                  policy: str = "round_robin", seed: int = 0):
@@ -96,6 +100,8 @@ class MasterScheduler:
         if accepted:
             self.tasks_scheduled += 1
             self._note_placement(td, wid)
+            if self.obs.enabled:
+                self.obs.queue(wid, +1)
         else:
             self.graph.ready.append(td)
 
@@ -112,6 +118,8 @@ class MasterScheduler:
                 if accepted:
                     self.tasks_scheduled += 1
                     self._note_placement(td, wid)
+                    if self.obs.enabled:
+                        self.obs.queue(wid, +1)
                     return True
             if attempt == 0:
                 self.poll_workers()
@@ -150,6 +158,10 @@ class MasterScheduler:
     def _collect(self, td: TaskDescriptor) -> None:
         self.graph.mark_executed(td)
         self.graph.completion.append(td)
+        # staged/sequential tds never went through an MPB ring (worker is
+        # None); only host-dispatched tasks decrement a worker channel
+        if self.obs.enabled and td.worker is not None:
+            self.obs.queue(td.worker, -1)
 
     def release_one(self) -> bool:
         """(iii) release one completed task's dependencies (lazy, §3.6)."""

@@ -75,6 +75,8 @@ def owner_home(td: TaskDescriptor) -> int:
 class ShardedExecutor(StagedExecutor):
     """Staged wavefronts, placed home-aware on the ambient device mesh."""
 
+    kind = "sharded"
+
     def __init__(self, graph, scheduler, group: bool = True,
                  n_homes: int = 4, owner_skew_threshold: float = 0.0):
         super().__init__(graph, scheduler, group=group)
@@ -124,10 +126,39 @@ class ShardedExecutor(StagedExecutor):
     def _owners(self, group: list[TaskDescriptor]) -> list[int]:
         owners = [owner_home(td) for td in group]
         if self.owner_skew_threshold > 0:
+            base = None
+            if self.obs.enabled:
+                # the tracker's live per-home queue depth: work of this
+                # wave still queued behind each home ("queued, not yet
+                # dispatched" — this group was dequeued before placement,
+                # so it is not double-counted)
+                depths = self.obs.queue_depths()
+                base = [max(0, depths.get(h, 0))
+                        for h in range(self.n_homes)]
             owners, spilled = rebalance_owners(
-                owners, self.n_homes, self.owner_skew_threshold)
+                owners, self.n_homes, self.owner_skew_threshold,
+                base_load=base)
             self.owner_overrides += spilled
+            if spilled and self.obs.enabled:
+                self.obs.emit("owner_override", wave=self._wave_id,
+                              spilled=spilled)
         return owners
+
+    # -- queue accounting (per owner-home channel) ----------------------------
+    def _home_counts(self, tds: list[TaskDescriptor]):
+        counts: dict[int, int] = defaultdict(int)
+        for td in tds:
+            counts[owner_home(td) % self.n_homes] += 1
+        return counts
+
+    def _enqueue_wave(self, wave: list[TaskDescriptor]) -> None:
+        for home, n in sorted(self._home_counts(wave).items()):
+            self.obs.queue(home, n)
+
+    def _dequeue_group(self, group: list[TaskDescriptor]) -> None:
+        # keyed on the raw owner home (pre-rebalance), matching enqueue
+        for home, n in sorted(self._home_counts(group).items()):
+            self.obs.queue(home, -n)
 
     # -- dispatch -----------------------------------------------------------
     def _run_group(self, group: list[TaskDescriptor]) -> None:
@@ -220,6 +251,7 @@ class ShardedExecutor(StagedExecutor):
                 jax.vmap(fn), mesh=mesh,
                 in_specs=tuple(spec for _ in ins), out_specs=spec,
                 check_vma=False))
+        self._last_mode = "shard_map"
         with suspend_runtime_scope():    # tracing runs fn on this thread
             result = sfn(*ins)
         self.sharded_dispatches += 1
@@ -238,6 +270,7 @@ class ShardedExecutor(StagedExecutor):
         vfn = self._vjit.get(fn)
         if vfn is None:
             vfn = self._vjit[fn] = jax.jit(jax.vmap(fn))
+        self._last_mode = "vmap_device"
         with suspend_runtime_scope():
             result = vfn(*ins)
         self._store_group(group, result)

@@ -1,0 +1,41 @@
+"""Opt-in ``jax.profiler`` trace-context hook.
+
+When ``RuntimeConfig(profile_waves=True)``, the staged/sharded executors
+wrap every wave dispatch in :func:`trace_span` — a
+``jax.profiler.TraceAnnotation`` — so a device profile captured with
+``jax.profiler.trace()`` (or TensorBoard) shows which XLA executions
+belong to which wave.  Disabled (the default) the span is a shared
+no-op context manager and costs nothing; if the installed jax has no
+TraceAnnotation the hook degrades to the same no-op instead of failing.
+"""
+from __future__ import annotations
+
+import contextlib
+
+__all__ = ["trace_span", "profiler_available"]
+
+_NULL = contextlib.nullcontext()
+
+
+def _annotation_cls():
+    try:
+        from jax.profiler import TraceAnnotation
+        return TraceAnnotation
+    except Exception:
+        return None
+
+
+def profiler_available() -> bool:
+    """True when the installed jax exposes ``profiler.TraceAnnotation``."""
+    return _annotation_cls() is not None
+
+
+def trace_span(label: str, enabled: bool = True):
+    """A context manager naming ``label`` in the jax profiler timeline;
+    a no-op when ``enabled`` is False or the profiler is unavailable."""
+    if not enabled:
+        return _NULL
+    cls = _annotation_cls()
+    if cls is None:
+        return _NULL
+    return cls(label)

@@ -1,0 +1,46 @@
+"""Human summaries of a trace: totals and the slowest waves.
+
+Feeds the CLI (``python -m repro.obs summary TRACE.jsonl --top 5``) and
+the CI step-summary table — the markdown output renders directly in a
+GitHub job summary.
+"""
+from __future__ import annotations
+
+from .events import Event
+
+__all__ = ["slowest_waves", "summary_table"]
+
+
+def slowest_waves(events: list[Event], top: int = 5) -> list[Event]:
+    """The ``top`` slowest ``wave_close`` events, slowest first (ties
+    break on wave order so the result is deterministic)."""
+    waves = [e for e in events if e.kind == "wave_close"]
+    waves.sort(key=lambda e: (-e.data["wall_s"], e.data["wave"]))
+    return waves[:top]
+
+
+def summary_table(events: list[Event], top: int = 5) -> str:
+    """A markdown summary: one totals line plus a top-``top`` slowest
+    waves table."""
+    kinds: dict[str, int] = {}
+    for e in events:
+        kinds[e.kind] = kinds.get(e.kind, 0) + 1
+    waves = [e for e in events if e.kind == "wave_close"]
+    wall = sum(e.data["wall_s"] for e in waves)
+    moved = sum(e.data["bytes_moved"] for e in waves)
+    staged = sum(e.data["bytes_staged"] for e in waves)
+    lines = [f"**trace**: {len(events)} events · {len(waves)} waves · "
+             f"{kinds.get('dispatch', 0)} dispatches · "
+             f"{wall:.4f} s dispatch wall · {moved} B moved · "
+             f"{staged} B staged", ""]
+    if waves:
+        lines.append(f"| wave | executor | tasks | dispatches | wall s | "
+                     f"moved B | staged B |")
+        lines.append("|---|---|---|---|---|---|---|")
+        for e in slowest_waves(events, top):
+            d = e.data
+            lines.append(
+                f"| {d['wave']} | {d['executor']} | {d['tasks']} | "
+                f"{d['dispatches']} | {d['wall_s']:.4f} | "
+                f"{d['bytes_moved']} | {d['bytes_staged']} |")
+    return "\n".join(lines)

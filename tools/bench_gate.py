@@ -34,8 +34,54 @@ import pathlib
 import sys
 
 SCHEMA = "bddt-scc-bench/1"
+TIMINGS_SCHEMA = "bddt-scc-timings/1"
 DEFAULT_BASELINE = "benchmarks/BASELINE_BENCH.json"
 DEFAULT_THRESHOLD = 0.20
+
+
+def validate_timings(doc) -> list[str]:
+    """Shape-check the optional ``timings`` block (empty = valid).
+
+    Timings are *informational*: they must be well-formed finite numbers
+    (so the nightly series stays parseable) but are never diffed against
+    a baseline — wall clocks flake on shared runners, and the paper's
+    deterministic claims are gated through entry ``metrics`` instead.
+    An artifact without a timings block is also valid (older emitters).
+    """
+    t = doc.get("timings")
+    if t is None:
+        return []
+    bad: list[str] = []
+    if not isinstance(t, dict):
+        return ["'timings' is not an object"]
+    if t.get("schema") != TIMINGS_SCHEMA:
+        bad.append(f"timings schema is {t.get('schema')!r}, "
+                   f"expected {TIMINGS_SCHEMA!r}")
+    for key in ("suite_wall_s", "spawn_us_per_task"):
+        v = t.get(key)
+        if isinstance(v, bool) or not isinstance(v, (int, float)) \
+                or not math.isfinite(v) or v < 0:
+            bad.append(f"timings.{key} is not a finite non-negative "
+                       f"number ({v!r})")
+    staged = t.get("staged_wall_s")
+    if not isinstance(staged, dict) or not staged:
+        bad.append("timings.staged_wall_s missing/empty")
+    else:
+        for app, v in staged.items():
+            if isinstance(v, bool) or not isinstance(v, (int, float)) \
+                    or not math.isfinite(v) or v < 0:
+                bad.append(f"timings.staged_wall_s[{app!r}] is not a "
+                           f"finite non-negative number ({v!r})")
+    return bad
+
+
+def timings_point(doc) -> dict | None:
+    """One series point for the nightly append-only timing log: the
+    timings block plus enough identity (suite, env) to plot it."""
+    t = doc.get("timings")
+    if t is None:
+        return None
+    return {**t, "env": doc.get("env", {})}
 
 
 # ---------------------------------------------------------------------------
@@ -158,16 +204,32 @@ def main(argv=None) -> int:
                     help="relative regression tolerance (default 0.20)")
     ap.add_argument("--update", action="store_true",
                     help="bless the artifact as the new baseline")
+    ap.add_argument("--append-timings", metavar="SERIES",
+                    help="append the artifact's timings block (one JSON "
+                         "line) to this series file — informational, "
+                         "never gated")
     args = ap.parse_args(argv)
 
     with open(args.artifact, encoding="utf-8") as f:
         doc = json.load(f)
-    bad = validate_schema(doc)
+    bad = validate_schema(doc) + validate_timings(doc)
     if bad:
         for b in bad:
             print(f"SCHEMA: {b}")
         print(f"{args.artifact}: FAIL, invalid {SCHEMA} document")
         return 1
+
+    if args.append_timings:
+        point = timings_point(doc)
+        if point is None:
+            print(f"{args.artifact}: no timings block to append")
+        else:
+            series = pathlib.Path(args.append_timings)
+            series.parent.mkdir(parents=True, exist_ok=True)
+            with series.open("a", encoding="utf-8") as f:
+                f.write(json.dumps(point, sort_keys=True) + "\n")
+            print(f"{series}: appended timings point "
+                  f"(suite={point.get('suite')})")
 
     base_path = pathlib.Path(args.baseline)
     if args.update or not base_path.exists():
