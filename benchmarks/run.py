@@ -118,7 +118,8 @@ def _bench_mesh():
 
 
 def app_entries(cfg: dict, report, sim_params=None,
-                owner_skew: float = 0.0, tracker=None) -> list[dict]:
+                owner_skew: float = 0.0, tracker=None,
+                profile_waves: bool = False) -> list[dict]:
     """The five paper apps as real task programs: staged (wall time +
     dispatch counts), sharded on a mesh over all local devices
     (deterministic cross-home traffic of the striped placement plus the
@@ -138,11 +139,12 @@ def app_entries(cfg: dict, report, sim_params=None,
         kw = cfg["app_sizes"].get(name, {})
         t0 = time.perf_counter()
         staged = run_app(name, "staged", app_kwargs=kw, n_workers=workers,
-                         **trk)
+                         profile_waves=profile_waves, **trk)
         wall_staged = time.perf_counter() - t0
         with dist.use_mesh(_bench_mesh()):
             sharded = run_app(name, "sharded", app_kwargs=kw,
-                              n_workers=workers, **trk)
+                              n_workers=workers,
+                              profile_waves=profile_waves, **trk)
         sim = run_app(name, "sim", app_kwargs=kw, n_workers=workers,
                       sim_params=sim_params)
         sim1 = run_app(name, "sim", app_kwargs=kw, n_workers=workers,
@@ -197,16 +199,21 @@ def app_entries(cfg: dict, report, sim_params=None,
 def build_bench(suite: str, *, skip_roofline: bool = True,
                 report=_report,
                 owner_skew: float | None = None,
-                trace: str | None = None) -> tuple[dict, bool]:
+                trace: str | None = None,
+                profile_dir: str | None = None) -> tuple[dict, bool]:
     """Run the whole suite; returns (BENCH document, all checks passed).
     ``owner_skew`` overrides the suite's owner-override threshold (None =
     the suite default: off for smoke, 1.5 for paper).  ``trace`` writes a
     JSONL wave trace of the staged and sharded app runs there (the CI
     artifact; open it with ``python -m repro.obs summary`` or export to
-    Chrome via ``python -m repro.obs chrome``)."""
+    Chrome via ``python -m repro.obs chrome``).  ``profile_dir`` brackets
+    the app runs in a ``jax.profiler`` trace session writing there, with
+    ``profile_waves`` wave annotations enabled, so the per-wave spans
+    land in the uploaded trace files (no-op if jax lacks the API)."""
     import dataclasses
 
     from repro.core.calibrate import calibrate, validate_trends
+    from repro.obs import profile_session
     from . import granularity, microbench, paper_suite
 
     cfg = SUITES[suite]
@@ -238,13 +245,27 @@ def build_bench(suite: str, *, skip_roofline: bool = True,
         from repro.obs import JsonlTracker
         tracker = JsonlTracker(trace)
     try:
-        apps = app_entries(cfg, report, sim_params=p,
-                           owner_skew=owner_skew, tracker=tracker)
+        with profile_session(profile_dir) as profiling:
+            if profile_dir:
+                report("profile", "session", "on" if profiling else
+                       "unavailable")
+            apps = app_entries(cfg, report, sim_params=p,
+                               owner_skew=owner_skew, tracker=tracker,
+                               profile_waves=profiling)
     finally:
         if tracker is not None:
             tracker.close()
             report("trace", "events", tracker.records_written)
     over = runtime_overheads(report)
+
+    # 4. master-side admission throughput: central analyzer vs the
+    # home-sharded dependence managers on a streaming synthetic graph
+    # (deterministic counters gated; measured rates info-only)
+    from .spawn_throughput import entry as spawn_throughput_entry
+    spawn = spawn_throughput_entry(suite)
+    for k, v in spawn["info"].items():
+        if isinstance(v, float):
+            report("spawn_throughput", k, round(v, 2))
 
     entries: list[dict] = [{
         "id": "microbench",
@@ -286,6 +307,7 @@ def build_bench(suite: str, *, skip_roofline: bool = True,
         "metrics": {
             "blocks_walked_per_task": over["blocks_walked_per_task"]},
     })
+    entries.append(spawn)
 
     roofline_note = "skipped (--skip-roofline)"
     if not skip_roofline:
@@ -401,11 +423,16 @@ def main(argv=None) -> None:
     ap.add_argument("--trace", metavar="PATH",
                     help="write a JSONL wave trace of the staged/sharded "
                          "app runs (repro.obs event schema)")
+    ap.add_argument("--profile-dir", metavar="DIR",
+                    help="bracket the app runs in a jax.profiler trace "
+                         "session writing here, with per-wave "
+                         "profile_waves annotations enabled")
     args = ap.parse_args(argv)
 
     print("name,metric,value")
     doc, ok = build_bench(args.suite, skip_roofline=args.skip_roofline,
-                          owner_skew=args.owner_skew, trace=args.trace)
+                          owner_skew=args.owner_skew, trace=args.trace,
+                          profile_dir=args.profile_dir)
     if args.emit:
         with open(args.emit, "w", encoding="utf-8") as f:
             json.dump(doc, f, indent=1, sort_keys=True)

@@ -1,0 +1,229 @@
+"""Spawn-throughput benchmark: central vs home-sharded dependence admission.
+
+Measures the master-side task-initiation rate (tasks/sec) on synthetic
+streaming graphs — the §5 master-bottleneck axis, and the measurement the
+home-sharded dependence manager must win: admission throughput should
+scale with manager count instead of serializing on one analyzer walk.
+
+The driver exercises the *runtime front half only*: descriptor pool →
+dependence analysis → graph insert, with windowed completion/release so
+the live set stays bounded and ``forget_completed`` bookkeeping is part
+of the measured loop (a streaming workload releases as it spawns).  No
+executor runs — task bodies are never called, so the rate isolates
+exactly the code the sharded refactor changed.
+
+The synthetic graph is a wrap-around row stencil over a striped
+``BlockArray``: task ``t`` rewrites row segment ``(t % G)`` and reads the
+two neighbouring rows' segments, so every task carries a multi-block
+footprint spanning several homes and RAW/WAR chains recur with period
+``G`` — enough dependence structure that admission does real work.
+
+Both managers run the same stream; a rolling checksum over each task's
+discovered dependence set (identical work charged to both) verifies they
+found the *same* dependences before any rate is reported.
+
+CLI::
+
+    python -m benchmarks.spawn_throughput --tasks 100000 --homes 1 2 4 8
+    python -m benchmarks.spawn_throughput --suite smoke      # small + fast
+
+Bench integration: ``entry()`` emits a ``bddt-scc-bench/1`` entry whose
+``metrics`` are the deterministic counters (tasks, deps, messages —
+gate-safe) and whose ``info`` carries the measured rates (machine-speed
+dependent, never gated), matching how ``benchmarks.run`` treats wall
+times.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from collections import deque
+
+from repro.core.blocks import BlockArray, In, InOut
+from repro.core.depman import ShardedDependenceManager
+from repro.core.deps import DependenceAnalyzer
+from repro.core.graph import DescriptorPool, TaskGraph
+from repro.core.placement import assign_homes
+
+# live-set bound: tasks complete (in spawn order — a valid topological
+# order of the stencil graph) once this many are in flight
+WINDOW = 256
+
+
+def _noop(*_a, **_k):
+    return None
+
+
+def build_array(grid: int, homes: int, seg: int = 8) -> BlockArray:
+    """A ``grid x seg`` block grid of 1-element tiles, row-banded over
+    ``homes`` (each block row behind one home, the stencil-friendly
+    layout) — footprints index blocks, bodies never run, so tiles are as
+    small as the allocator permits."""
+    ba = BlockArray.zeros((grid, seg), (1, 1))
+    assign_homes(ba, "striped_rows", homes)
+    return ba
+
+
+def _retire(graph: TaskGraph, analyzer, pool: DescriptorPool,
+            live: deque) -> None:
+    td = live.popleft()
+    graph.mark_executed(td)
+    graph.release(td)
+    analyzer.forget_completed(td)
+    pool.release(td)
+
+
+def run_stream(n_tasks: int, analyzer, ba: BlockArray,
+               window: int = WINDOW) -> dict:
+    """Push ``n_tasks`` stencil tasks through one manager; returns the
+    measured rate plus the counters and dependence checksum."""
+    grid = ba.grid[0]
+    seg = ba.grid[1]
+    pool = DescriptorPool(capacity=window * 2)
+    graph = TaskGraph()
+    live: deque = deque()
+    csum = 0
+    t0 = time.perf_counter()
+    for t in range(n_tasks):
+        i = t % grid
+        args = (InOut(ba[i, 0:seg]),
+                In(ba[(i + 1) % grid, 0:seg]),
+                In(ba[(i - 1) % grid, 0:seg]))
+        td = pool.acquire(_noop, args)
+        while td is None:
+            _retire(graph, analyzer, pool, live)
+            td = pool.acquire(_noop, args)
+        td.spawn_order = t
+        deps = analyzer.analyze(td)
+        graph.insert(td, deps)
+        live.append(td)
+        # rolling checksum of the discovered dependence set — identical
+        # work on both managers, so rates stay comparable
+        acc = len(deps)
+        for d in deps:
+            acc += d.tid
+        csum = (csum * 1000003 + acc) % (1 << 61)
+        if len(live) >= window:
+            _retire(graph, analyzer, pool, live)
+    while live:
+        _retire(graph, analyzer, pool, live)
+    wall = time.perf_counter() - t0
+    return {
+        "tasks": n_tasks,
+        "wall_s": wall,
+        "tasks_per_s": n_tasks / wall if wall > 0 else 0.0,
+        "deps_found": analyzer.deps_found,
+        "blocks_walked": analyzer.blocks_walked,
+        "dep_checksum": csum,
+        "live_blocks": getattr(analyzer, "live_blocks",
+                               len(getattr(analyzer, "_meta", ()))),
+    }
+
+
+def _best_of(reps: int, make_analyzer, ba: BlockArray,
+             n_tasks: int) -> dict:
+    """Best-of-``reps`` rate (fresh analyzer state per rep — dependence
+    metadata is per-analyzer, the array only carries the home map); the
+    counters and checksum are deterministic and asserted stable."""
+    best: dict | None = None
+    for _ in range(reps):
+        analyzer = make_analyzer()
+        r = run_stream(n_tasks, analyzer, ba)
+        r["analyzer"] = analyzer
+        if best is not None and r["dep_checksum"] != best["dep_checksum"]:
+            raise AssertionError("nondeterministic dependence stream")
+        if best is None or r["tasks_per_s"] > best["tasks_per_s"]:
+            best = r
+    return best
+
+
+def run_matrix(n_tasks: int, homes: list[int], grid: int = 64,
+               seg: int = 8, reps: int = 3) -> dict:
+    """Central and sharded per manager count, best-of-``reps`` each (the
+    loop is wall-clock timed, so repetitions absorb scheduler noise);
+    verifies every run found the same dependences before reporting
+    rates."""
+    results: dict = {"tasks": n_tasks, "grid": grid, "seg": seg}
+    ba = build_array(grid, max(homes), seg)
+    central = _best_of(reps, DependenceAnalyzer, ba, n_tasks)
+    central.pop("analyzer")
+    results["central"] = central
+    results["sharded"] = {}
+    for h in homes:
+        ba_h = build_array(grid, h, seg)
+
+        def make():
+            mgr = ShardedDependenceManager(n_managers=h)
+            mgr.register_array(ba_h)
+            return mgr
+
+        r = _best_of(reps, make, ba_h, n_tasks)
+        mgr = r.pop("analyzer")
+        r["dep_messages"] = mgr.dep_messages
+        r["admissions"] = list(mgr.admissions)
+        if r["dep_checksum"] != central["dep_checksum"]:
+            raise AssertionError(
+                f"sharded manager ({h} homes) found different dependences "
+                f"than central: {r['dep_checksum']} != "
+                f"{central['dep_checksum']}")
+        results["sharded"][h] = r
+    return results
+
+
+def entry(suite: str = "smoke") -> dict:
+    """One ``bddt-scc-bench/1`` entry: deterministic counters as gated
+    metrics, measured rates as info (wall-clock — never gated)."""
+    n_tasks = 100_000 if suite == "paper" else 10_000
+    homes = [1, 2, 4, 8]
+    res = run_matrix(n_tasks, homes)
+    central = res["central"]
+    at4 = res["sharded"][4]
+    info = {
+        "suite": suite,
+        "grid": res["grid"],
+        "central_tasks_per_s": central["tasks_per_s"],
+        "speedup_at_4_homes": (at4["tasks_per_s"] /
+                               central["tasks_per_s"]),
+    }
+    for h, r in res["sharded"].items():
+        info[f"sharded_{h}_tasks_per_s"] = r["tasks_per_s"]
+    return {
+        "id": f"spawn-throughput-{suite}",
+        "kind": "spawn_throughput",
+        "metrics": {
+            "tasks": float(central["tasks"]),
+            "deps_found": float(central["deps_found"]),
+            "blocks_walked": float(central["blocks_walked"]),
+            "dep_messages_4_homes": float(at4["dep_messages"]),
+        },
+        "info": info,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tasks", type=int, default=None,
+                    help="stream length (default: per --suite)")
+    ap.add_argument("--homes", type=int, nargs="+", default=[1, 2, 4, 8],
+                    help="manager counts for the sharded runs")
+    ap.add_argument("--grid", type=int, default=64,
+                    help="stencil rows (live dependence window)")
+    ap.add_argument("--suite", choices=("smoke", "paper"), default="smoke",
+                    help="smoke = 10k tasks, paper = 100k (unless --tasks)")
+    ap.add_argument("--reps", type=int, default=3,
+                    help="repetitions per config (best rate reported)")
+    args = ap.parse_args(argv)
+    n_tasks = args.tasks or (100_000 if args.suite == "paper" else 10_000)
+    res = run_matrix(n_tasks, args.homes, grid=args.grid, reps=args.reps)
+    c = res["central"]
+    print(f"central : {c['tasks_per_s']:>12.0f} tasks/s  "
+          f"({c['deps_found']} deps, {c['blocks_walked']} blocks)")
+    for h, r in res["sharded"].items():
+        print(f"sharded{h:>2}: {r['tasks_per_s']:>12.0f} tasks/s  "
+              f"(x{r['tasks_per_s'] / c['tasks_per_s']:.2f} vs central, "
+              f"{r['dep_messages']} msgs, admits {r['admissions']})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -6,6 +6,7 @@ non cache-coherent hardware — implemented as:
 * :mod:`api`        — the OmpSs front-end: @task footprints, futures, config
 * :mod:`blocks`     — the custom block allocator (BlockArray / Region / In-Out-InOut)
 * :mod:`deps`       — block-level dynamic dependence analysis (BDDT)
+* :mod:`depman`     — home-sharded dependence managers over MPB channels
 * :mod:`graph`      — task descriptors, descriptor pool, ready/completion queues
 * :mod:`mpb`        — message-passing-buffer SPSC descriptor rings
 * :mod:`scheduler`  — the master's running/polling modes + lazy release
@@ -19,9 +20,10 @@ non cache-coherent hardware — implemented as:
 from .api import (RuntimeConfig, RuntimeStats, TaskFuture, current_runtime,
                   task)
 from .blocks import BlockArray, In, InOut, Out, Region
+from .depman import ShardedDependenceManager
 from .executor import Executor
 from .runtime import TaskRuntime
 
 __all__ = ["TaskRuntime", "BlockArray", "In", "Out", "InOut", "Region",
            "task", "TaskFuture", "RuntimeConfig", "RuntimeStats",
-           "Executor", "current_runtime"]
+           "Executor", "ShardedDependenceManager", "current_runtime"]

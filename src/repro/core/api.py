@@ -140,6 +140,14 @@ class RuntimeConfig:
     * ``n_workers`` / ``mpb_slots`` — worker count and per-worker MPB ring
       depth (§3.2).
     * ``pool_capacity`` — pre-allocated task-descriptor pool (§3.3).
+    * ``dep_manager`` — "central" (one master-side
+      ``DependenceAnalyzer``, the paper's §3.3 loop) or "sharded"
+      (``ShardedDependenceManager``: one manager per block home —
+      ``n_controllers`` of them — admitting footprint slices
+      independently, with dep_query/dep_grant/release messages over
+      MPB-style channels).  Both produce bit-identical schedules; sharded
+      removes the global admission bottleneck and is charged as message
+      traffic by the DES.
     * ``policy``      — running-mode scheduling policy (§3.4).
     * ``placement`` / ``n_controllers`` — block -> memory-controller map;
       the sharded executor reuses the same homes as mesh-device homes.
@@ -179,6 +187,7 @@ class RuntimeConfig:
     n_workers: int = 4
     mpb_slots: int = 16
     pool_capacity: int = 4096
+    dep_manager: str = "central"
     policy: str = "round_robin"
     placement: str = "striped"
     n_controllers: int = 4
@@ -199,6 +208,9 @@ class RuntimeConfig:
         if self.policy not in POLICIES:
             raise ValueError(f"policy must be one of {tuple(POLICIES)}, "
                              f"got {self.policy!r}")
+        if self.dep_manager not in ("central", "sharded"):
+            raise ValueError(f"dep_manager must be 'central' or 'sharded', "
+                             f"got {self.dep_manager!r}")
         for fld in ("n_workers", "mpb_slots", "pool_capacity",
                     "n_controllers"):
             if getattr(self, fld) < 1:
@@ -274,6 +286,11 @@ class RuntimeStats:
     tile_moves: int | None = None
     bytes_moved: int | None = None
     bytes_staged: int | None = None
+    # sharded dependence manager: total dep_query/dep_grant/release
+    # messages over the MPB channels, and per-manager admission counts
+    # (None under the central analyzer)
+    dep_messages: int | None = None
+    manager_admissions: list[int] | None = None
     # sim executor
     predicted_total_s: float | None = None
 

@@ -1,0 +1,428 @@
+"""Home-sharded dependence management: per-home managers over MPB channels.
+
+The paper keeps dependence analysis on one master core and pays for it in
+master-side spawn cost (§3.3, §5); the related work attacks exactly that
+bottleneck by distributing the task manager (Bosch et al., *Asynchronous
+Runtime with Distributed Manager*) and by hierarchical dependency-aware
+scheduling (Lyberis et al., *Myrmics*).  This module is that refactor:
+:class:`ShardedDependenceManager` splits the global
+:class:`~repro.core.deps.DependenceAnalyzer` into N :class:`HomeManager` s
+— one per block home, the same ``placement.device_assignment`` regions
+``DeviceTileStore`` already uses — each owning the block metadata for its
+home and admitting the slice of a task's footprint that touches its
+region.
+
+Transport is paper-faithful: the master exchanges small typed messages
+(:class:`DepMessage`, kinds ``dep_query`` / ``dep_grant`` / ``release``)
+with each manager over bounded MPB-style SPSC rings
+(:class:`~repro.core.mpb.MPBChannel`).  One ``dep_query`` carries the
+whole per-home slice of a footprint — a few ``(reads, writes, blocks)``
+region runs, a handful of 32-byte MPB lines on the wire; the manager
+answers with one ``dep_grant`` naming the predecessor tasks it found, and
+completion fan-out sends one ``release`` per involved home.  Under
+CPython the master pumps manager inboxes synchronously (single-threaded),
+but the protocol is the SPSC-plus-fences discipline that runs managers on
+their own cores on SCC — and the DES (``sim.py``) charges exactly this
+message traffic, with the per-home metadata walks overlapping instead of
+serializing on the master.
+
+Semantics are bit-compatible with the central analyzer: block metadata is
+partitioned by home (each block has exactly one owner), so the union of
+per-home dependence grants equals the central analyzer's dependence set
+for every task — the determinism pin in ``tests/test_depman.py`` holds
+central and sharded to identical wave schedules and numerics on all
+benchmark apps.
+
+Readiness is sharded too: the manager keeps one ready deque per home
+(owner-computes — a task parks at the home of its first output block),
+``MasterScheduler.drain_ready`` round-robins over them, and the staged
+wave builder consumes the per-home ready sets level by level.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import TYPE_CHECKING, Iterable
+
+from repro.obs.tracker import NULL_TRACKER
+
+from .deps import BlockId
+from .mpb import MPBChannel
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .graph import TaskDescriptor
+
+__all__ = ["DepMessage", "HomeManager", "ShardedDependenceManager"]
+
+_MSG_KINDS = ("dep_query", "dep_grant", "release")
+
+
+@dataclass(slots=True)
+class DepMessage:
+    """One typed manager message: a few MPB lines on the wire.
+
+    * ``dep_query``  (master -> manager): ``payload`` is the task's
+      per-home footprint slice — region runs of ``(reads, writes,
+      blocks)``.
+    * ``dep_grant``  (manager -> master): ``payload`` is the set of
+      predecessor tasks the manager's metadata ordered the task after.
+    * ``release``    (master -> manager): ``payload`` is the released
+      task's slice (as admitted); the manager drops its references.
+    """
+    kind: str
+    home: int
+    task: "TaskDescriptor"
+    payload: object = None
+
+
+class HomeManager:
+    """One home's dependence manager: owns the block metadata for every
+    block homed in its region and admits footprint slices independently.
+
+    The metadata is the BDDT per-block ordering state (last writer +
+    readers since that write, §3.3) kept as two plain dicts — leaner
+    than the central analyzer's per-block objects, which is where the
+    sharded admission path wins back its messaging overhead.
+    """
+
+    __slots__ = ("home", "_writer", "_readers", "deps_found",
+                 "admissions", "ready")
+
+    def __init__(self, home: int):
+        self.home = home
+        self._writer: dict[BlockId, "TaskDescriptor"] = {}
+        self._readers: dict[BlockId, list["TaskDescriptor"]] = {}
+        self.deps_found = 0             # dependences this manager granted
+        self.admissions = 0             # footprint slices admitted
+        # per-home ready deque (owner-computes): what drain_ready and the
+        # staged wave builder consume
+        self.ready: deque["TaskDescriptor"] = deque()
+
+    @property
+    def live_blocks(self) -> int:
+        """Blocks with live ordering state (leak check surface)."""
+        return len(self._writer) + sum(1 for k in self._readers
+                                       if k not in self._writer)
+
+    def admit(self, task: "TaskDescriptor",
+              items: list) -> set["TaskDescriptor"]:
+        """Process one ``dep_query``: the fused collect-then-publish walk
+        over this home's slice.  Each region run is visited in argument
+        order, so a block touched by several modes of one task sees the
+        same sequence of states the central analyzer's two passes produce
+        (self-dependences are filtered exactly like the central walk)."""
+        writer = self._writer
+        readers = self._readers
+        deps: set[TaskDescriptor] = set()
+        add = deps.add
+        wget = writer.get
+        rget = readers.get
+        for r, w, blocks in items:
+            if w:
+                for block in blocks:
+                    lw = wget(block)
+                    if lw is not None and lw is not task \
+                            and not lw.is_complete:
+                        add(lw)                      # RAW / WAW
+                    rl = rget(block)
+                    if rl is not None:
+                        for t in rl:
+                            if t is not task and not t.is_complete:
+                                add(t)               # WAR
+                        del readers[block]
+                    writer[block] = task
+            else:
+                for block in blocks:
+                    lw = wget(block)
+                    if lw is not None and lw is not task \
+                            and not lw.is_complete:
+                        add(lw)                      # RAW
+                    rl = rget(block)
+                    if rl is None:
+                        readers[block] = [task]
+                    elif task not in rl:
+                        rl.append(task)
+        self.admissions += 1
+        self.deps_found += len(deps)
+        return deps
+
+    def sync(self, blocks: Iterable[BlockId],
+             writers_only: bool) -> set["TaskDescriptor"]:
+        """The ``tasks_touching`` slice for this home (wait_on support)."""
+        found: set[TaskDescriptor] = set()
+        for block in blocks:
+            w = self._writer.get(block)
+            if w is not None and not w.is_complete:
+                found.add(w)
+            if not writers_only:
+                for r in self._readers.get(block, ()):
+                    if not r.is_complete:
+                        found.add(r)
+        return found
+
+    def forget(self, task: "TaskDescriptor", items: list) -> None:
+        """Process one ``release``: drop the task's references so block
+        state stays O(live tasks) — entries with no live writer and no
+        live readers are deleted outright."""
+        writer = self._writer
+        readers = self._readers
+        for _r, _w, blocks in items:
+            for block in blocks:
+                if writer.get(block) is task:
+                    del writer[block]
+                rl = readers.get(block)
+                if rl is not None:
+                    try:
+                        rl.remove(task)
+                    except ValueError:
+                        pass
+                    if not rl:
+                        del readers[block]
+
+
+class ShardedDependenceManager:
+    """N per-home managers behind the central analyzer's protocol.
+
+    Drop-in for :class:`~repro.core.deps.DependenceAnalyzer` at every
+    runtime touch point (``analyze`` / ``tasks_touching`` /
+    ``forget_completed`` / the ``blocks_walked`` / ``deps_found``
+    counters), plus the sharded extras the scheduler and wave builder
+    consume: per-home ready deques (:meth:`push_ready` /
+    :meth:`pop_ready`) and owner routing (:meth:`owner_of`).
+
+    Routing needs each block's home, which lives on its ``BlockArray``;
+    the runtime calls :meth:`register_array` for every array it
+    registers, so the router is one dict lookup per footprint block.
+    The admitted slice of each live task is kept (master-side, O(live
+    tasks) — the same lifetime as its descriptor) so completion fan-out
+    reuses it instead of re-partitioning the footprint.
+    """
+
+    def __init__(self, n_managers: int = 4, channel_slots: int = 16,
+                 obs=NULL_TRACKER):
+        if n_managers < 1:
+            raise ValueError("need at least one manager")
+        self.n_managers = n_managers
+        self.obs = obs
+        self.managers = [HomeManager(h) for h in range(n_managers)]
+        # MPB-style SPSC rings: one inbox (master -> manager) and one
+        # grant channel (manager -> master) per home
+        self.inbox = [MPBChannel(f"dep/home{h}", channel_slots)
+                      for h in range(n_managers)]
+        self.grants = [MPBChannel(f"grant/home{h}", channel_slots)
+                       for h in range(n_managers)]
+        self._homes: dict[int, dict] = {}    # array_id -> tile home map
+        self._live_parts: dict = {}          # td -> admitted slices
+        # region -> per-home block runs.  Task programs name the same
+        # footprint regions over and over (the same tiles every
+        # iteration), so the routing walk runs once per distinct region
+        # and every later admission is a dict hit.  Invalidated when an
+        # array (re)registers, which is when home maps change.
+        self._route_cache: dict = {}
+        self.dep_messages = 0
+        # blocks walked during admission routing — mirrors the central
+        # analyzer's count so stats stay comparable across managers
+        self.blocks_walked = 0
+        self._deps_found = 0                 # unioned, master-side
+        self._rr_home = 0                    # drain_ready round-robin
+
+    # -- routing -------------------------------------------------------------
+    def register_array(self, ba) -> None:
+        """Learn an array's block -> home map (called at registration,
+        after ``placement.assign_homes`` ran)."""
+        self._homes[ba.array_id] = ba.home
+        self._route_cache.clear()
+
+    def _route(self, region) -> tuple:
+        """Per-home block runs of one region: ``(n_blocks, ((home,
+        blocks), ...))``, cached by the region's identity (array +
+        tile ranges)."""
+        key = (region.array.array_id, region.ranges)
+        hit = self._route_cache.get(key)
+        if hit is None:
+            ids = region.block_ids
+            hmap = self._homes.get(region.array.array_id)
+            if not hmap:
+                runs: dict[int, list] = {0: list(ids)}
+            else:
+                n = self.n_managers
+                hget = hmap.get
+                runs = {}
+                for block in ids:
+                    h = hget(block[1], 0) % n
+                    blocks = runs.get(h)
+                    if blocks is None:
+                        runs[h] = [block]
+                    else:
+                        blocks.append(block)
+            hit = (len(ids), tuple(runs.items()))
+            self._route_cache[key] = hit
+        return hit
+
+    def _partition(self, task: "TaskDescriptor") -> dict[int, list]:
+        """Split a footprint into per-home slices of ``(reads, writes,
+        blocks)`` region runs, in argument order (the order
+        :meth:`HomeManager.admit` replays)."""
+        route_get = self._route_cache.get
+        route = self._route
+        parts: dict[int, list] = {}
+        walked = 0
+        for mode in task.args:
+            region = mode.region
+            hit = route_get((region.array.array_id, region.ranges)) \
+                or route(region)
+            walked += hit[0]
+            r, w = mode.READS, mode.WRITES
+            for h, blocks in hit[1]:
+                lst = parts.get(h)
+                if lst is None:
+                    parts[h] = [(r, w, blocks)]
+                else:
+                    lst.append((r, w, blocks))
+        self.blocks_walked += walked
+        return parts
+
+    # -- the message protocol -----------------------------------------------
+    def _post(self, home: int, msg: DepMessage) -> None:
+        """Send one message to a manager's inbox, pumping the manager on
+        backpressure (a full ring never deadlocks: the consumer is always
+        runnable)."""
+        ch = self.inbox[home]
+        while not ch.try_send(msg):
+            self._pump(home)
+        self.dep_messages += 1
+
+    def _pump(self, home: int) -> None:
+        """Drain one manager's inbox: queries are admitted and answered
+        with a grant on the manager's grant channel; releases drop
+        metadata in place."""
+        mgr = self.managers[home]
+        for msg in self.inbox[home].recv_all():
+            if msg.kind == "dep_query":
+                deps = mgr.admit(msg.task, msg.payload)
+                grant = DepMessage("dep_grant", home, msg.task, deps)
+                if not self.grants[home].try_send(grant):
+                    # protocol invariant: the master drains grants after
+                    # every pump, so the grant ring can never refill past
+                    # capacity — a full ring means a lost dependence set
+                    raise RuntimeError(
+                        f"dep_grant ring overflow on home {home}")
+                self.dep_messages += 1
+            else:                                    # release
+                mgr.forget(msg.task, msg.payload)
+
+    # -- the DependenceAnalyzer protocol --------------------------------------
+    def analyze(self, task: "TaskDescriptor") -> set["TaskDescriptor"]:
+        """Route the footprint to its home managers as ``dep_query``
+        messages; union the ``dep_grant`` answers."""
+        parts = self._partition(task)
+        self._live_parts[task] = parts
+        obs_on = self.obs.enabled
+        deps: set[TaskDescriptor] = set()
+        for home, items in parts.items():
+            depth = len(self.inbox[home])
+            self._post(home, DepMessage("dep_query", home, task, items))
+            self._pump(home)
+            for grant in self.grants[home].recv_all():
+                got = grant.payload
+                if got:
+                    deps |= got
+                if obs_on:
+                    self.obs.emit("manager_admit", manager=home,
+                                  task=task.tid, deps=len(got),
+                                  depth=depth)
+            if obs_on:
+                self.obs.emit("dep_msg", manager=home, msg="dep_query",
+                              count=1)
+                self.obs.emit("dep_msg", manager=home, msg="dep_grant",
+                              count=1)
+        self._deps_found += len(deps)
+        return deps
+
+    def tasks_touching(self, blocks, mode: str = "in") \
+            -> set["TaskDescriptor"]:
+        """Same rules as the central analyzer's region sync, routed by
+        home (``mode="in"`` waits for writers; ``"out"``/``"inout"`` for
+        readers too)."""
+        if mode not in ("in", "out", "inout"):
+            raise ValueError(f"mode must be in/out/inout, got {mode!r}")
+        n = self.n_managers
+        homes = self._homes
+        per_home: dict[int, list] = {}
+        for block in blocks:
+            hmap = homes.get(block[0])
+            h = (hmap.get(block[1], 0) if hmap else 0) % n
+            per_home.setdefault(h, []).append(block)
+        found: set[TaskDescriptor] = set()
+        for h, blks in per_home.items():
+            found |= self.managers[h].sync(blks,
+                                           writers_only=(mode == "in"))
+        return found
+
+    def forget_completed(self, task: "TaskDescriptor") -> None:
+        """Completion fan-out: one ``release`` message per involved home,
+        carrying the slice admitted at initiation."""
+        parts = self._live_parts.pop(task, None)
+        if parts is None:                # never admitted here (defensive)
+            return
+        obs_on = self.obs.enabled
+        for home, items in parts.items():
+            self._post(home, DepMessage("release", home, task, items))
+            self._pump(home)
+            if obs_on:
+                self.obs.emit("dep_msg", manager=home, msg="release",
+                              count=1)
+
+    # -- stats ---------------------------------------------------------------
+    @property
+    def deps_found(self) -> int:
+        """Unioned master-side count — matches the central analyzer (a
+        predecessor granted by two managers counts once)."""
+        return self._deps_found
+
+    @property
+    def admissions(self) -> list[int]:
+        """Per-manager admitted footprint slices (the acceptance-visible
+        admission counts; also emitted as ``manager_admit`` events)."""
+        return [m.admissions for m in self.managers]
+
+    @property
+    def live_blocks(self) -> int:
+        return sum(m.live_blocks for m in self.managers)
+
+    # -- per-home readiness (owner-computes) -----------------------------------
+    def owner_of(self, td: "TaskDescriptor") -> int:
+        """A task parks at the home of its first output block (the same
+        owner-computes rule ``sharded.owner_home`` dispatches by)."""
+        for m in td.args:
+            if m.WRITES:
+                region = m.region
+                hmap = self._homes.get(region.array.array_id)
+                if hmap:
+                    return hmap.get(region.tile_indices[0], 0) \
+                        % self.n_managers
+                return 0
+        return 0
+
+    def push_ready(self, td: "TaskDescriptor", front: bool = False) -> None:
+        q = self.managers[self.owner_of(td)].ready
+        if front:
+            q.appendleft(td)
+        else:
+            q.append(td)
+
+    @property
+    def ready_count(self) -> int:
+        return sum(len(m.ready) for m in self.managers)
+
+    def pop_ready(self) -> "TaskDescriptor | None":
+        """Round-robin over the per-home ready deques (fair drain; no
+        home starves behind a deep neighbor)."""
+        n = self.n_managers
+        for i in range(n):
+            h = (self._rr_home + i) % n
+            q = self.managers[h].ready
+            if q:
+                self._rr_home = (h + 1) % n
+                return q.popleft()
+        return None

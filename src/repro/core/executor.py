@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import threading
 import time
-from collections import OrderedDict, defaultdict
+from collections import OrderedDict, defaultdict, deque
 from typing import Callable, Iterable, Protocol, Sequence, runtime_checkable
 
 import jax
@@ -305,11 +305,19 @@ class StagedExecutor(ExecutorBase):
     # -- wavefront layering ---------------------------------------------------
     def _wavefronts(self, tasks: list[TaskDescriptor]) \
             -> list[list[TaskDescriptor]]:
+        mgr = getattr(self.scheduler, "_ready_mgr", None)
+        if mgr is not None:
+            return self._wavefronts_sharded(tasks, mgr)
         indeg = {td: td.deps_remaining for td in tasks}
         frontier = [td for td, d in indeg.items() if d == 0]
         waves = []
         seen = 0
         while frontier:
+            # canonical intra-wave order: spawn order, not discovery
+            # order — the order is the schedule contract the sharded
+            # wave builder reproduces, so it must not depend on which
+            # predecessor happened to unlock a task first
+            frontier.sort(key=lambda t: t.spawn_order)
             waves.append(frontier)
             seen += len(frontier)
             nxt: list[TaskDescriptor] = []
@@ -320,6 +328,40 @@ class StagedExecutor(ExecutorBase):
                         if indeg[dep] == 0:
                             nxt.append(dep)
             frontier = nxt
+        if seen != len(tasks):
+            raise RuntimeError("cycle in task graph (impossible for "
+                               "footprint-derived deps)")
+        return waves
+
+    def _wavefronts_sharded(self, tasks: list[TaskDescriptor], mgr) \
+            -> list[list[TaskDescriptor]]:
+        """Wavefront layering over the sharded manager's per-home ready
+        sets: ready tasks bucket at their owner home (the same
+        owner-computes rule the per-home ready deques use), each wave is
+        the union of the buckets spawn-ordered, and the dependents
+        decrement refills next wave's buckets.  A wave is exactly the set
+        of zero-indegree tasks, so the *levels* are identical to the
+        central builder's — only who holds the ready tasks changes."""
+        indeg = {td: td.deps_remaining for td in tasks}
+        buckets = [deque() for _ in range(mgr.n_managers)]
+        for td in tasks:                 # pending order == spawn order
+            if indeg[td] == 0:
+                buckets[mgr.owner_of(td)].append(td)
+        waves = []
+        seen = 0
+        while any(buckets):
+            wave = [td for q in buckets for td in q]
+            wave.sort(key=lambda t: t.spawn_order)
+            for q in buckets:
+                q.clear()
+            waves.append(wave)
+            seen += len(wave)
+            for td in wave:
+                for dep in td.dependents:
+                    if dep in indeg:
+                        indeg[dep] -= 1
+                        if indeg[dep] == 0:
+                            buckets[mgr.owner_of(dep)].append(dep)
         if seen != len(tasks):
             raise RuntimeError("cycle in task graph (impossible for "
                                "footprint-derived deps)")

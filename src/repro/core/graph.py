@@ -157,8 +157,13 @@ class TaskGraph:
         self.n_unreleased += 1
         self.n_unexecuted += 1
         td.deps_remaining = len(deps)
-        td.preds = tuple(deps)
-        for d in deps:
+        # spawn-order the dependence set: ``deps`` arrives as a set whose
+        # iteration order depends on how it was assembled (central walk vs
+        # per-home manager grants), and preds/dependents order feeds the
+        # ready queues — sorting pins one schedule for both managers
+        ordered = sorted(deps, key=lambda t: t.spawn_order)
+        td.preds = tuple(ordered)
+        for d in ordered:
             d.dependents.append(td)
         if td.deps_remaining == 0:
             td.state = TaskState.READY

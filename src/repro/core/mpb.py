@@ -27,7 +27,8 @@ from typing import Optional
 
 from .graph import TaskDescriptor
 
-__all__ = ["SlotState", "MPBQueue", "MPB_LINE_BYTES", "MPB_BYTES_PER_CORE"]
+__all__ = ["SlotState", "MPBQueue", "MPBChannel", "MPB_LINE_BYTES",
+           "MPB_BYTES_PER_CORE"]
 
 MPB_LINE_BYTES = 32          # one MPB cache line (§3.2)
 MPB_BYTES_PER_CORE = 8192    # 8 KB of on-chip SRAM per core
@@ -148,3 +149,54 @@ class MPBQueue:
         with self._lock:
             return sum(1 for s in self._slots
                        if s.state is not SlotState.EMPTY)
+
+
+class MPBChannel:
+    """Bounded SPSC message ring for small typed control messages.
+
+    The dependence managers (``depman.py``) exchange ``dep_query`` /
+    ``dep_grant`` / ``release`` messages with the master over these rings
+    — the same MPB transport the descriptor queues use (§3.2), but
+    carrying a few 32-byte lines of metadata per message instead of a
+    task descriptor.
+
+    Unlike :class:`MPBQueue` this ring is lock-free even under CPython:
+    the master pumps each manager synchronously (single-threaded SPSC —
+    one producer, one consumer, never concurrently), so the protocol is
+    pure ring discipline.  ``try_send`` refuses when full (the producer
+    must pump the consumer — backpressure, never blocking), ``recv_all``
+    drains in FIFO order.  The DES charges one MPB round-trip per
+    message via ``SCCParams.mpb_write_s``.
+    """
+
+    def __init__(self, name: str, n_slots: int = 16):
+        if n_slots < 1:
+            raise ValueError("need at least one slot")
+        self.name = name
+        self.n_slots = n_slots
+        from collections import deque
+        self._ring: deque = deque()
+        # instrumentation (mirrors MPBQueue's counters)
+        self.sends = 0
+        self.full_stalls = 0
+
+    def try_send(self, msg) -> bool:
+        """Producer: append one message, or refuse when the ring is full
+        (the caller pumps the consumer and retries — SPSC backpressure)."""
+        if len(self._ring) >= self.n_slots:
+            self.full_stalls += 1
+            return False
+        self._ring.append(msg)
+        self.sends += 1
+        return True
+
+    def recv_all(self) -> list:
+        """Consumer: drain every pending message in FIFO order."""
+        if not self._ring:
+            return []
+        out = list(self._ring)
+        self._ring.clear()
+        return out
+
+    def __len__(self) -> int:
+        return len(self._ring)

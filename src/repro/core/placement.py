@@ -45,10 +45,20 @@ def _striped_diag(ba: BlockArray, n_homes: int) -> None:
         ba.home[idx] = int(np.sum(idx)) % n_homes
 
 
+def _striped_rows(ba: BlockArray, n_homes: int) -> None:
+    """Row-banded striping: ``home = i % n`` keeps each block row behind
+    one controller, so row-footprint tasks (stencils, row updates) touch
+    one home per region — the layout the sharded dependence manager
+    admits with the fewest cross-home messages."""
+    for idx in ba.block_indices():
+        ba.home[idx] = int(idx[0]) % n_homes
+
+
 PLACEMENTS: dict[str, Callable[[BlockArray, int], None]] = {
     "single": _single,
     "striped": _striped,
     "striped_diag": _striped_diag,
+    "striped_rows": _striped_rows,
 }
 
 

@@ -76,7 +76,13 @@ class TaskRuntime:
         self.n_controllers = config.n_controllers
         self.graph = TaskGraph()
         self.pool = DescriptorPool(config.pool_capacity)
-        self.analyzer = DependenceAnalyzer()
+        if config.dep_manager == "sharded":
+            from .depman import ShardedDependenceManager
+            self.analyzer = ShardedDependenceManager(
+                n_managers=config.n_controllers,
+                channel_slots=config.mpb_slots)
+        else:
+            self.analyzer = DependenceAnalyzer()
         self.queues = [MPBQueue(w, config.mpb_slots)
                        for w in range(config.n_workers)]
         self.scheduler = MasterScheduler(self.queues, self.graph, self.pool,
@@ -93,6 +99,10 @@ class TaskRuntime:
         self.obs, self._obs_owned = make_tracker(config.tracker)
         self._closed = False
         self.scheduler.obs = self.obs
+        if hasattr(self.analyzer, "register_array"):
+            # sharded dependence manager: emits dep_msg/manager_admit
+            # events through the runtime's tracker like everything else
+            self.analyzer.obs = self.obs
         self._exec: Executor = self._make_executor(config)
         self._exec.obs = self.obs
         self._exec.traffic = self.traffic
@@ -117,7 +127,10 @@ class TaskRuntime:
                                n_workers=config.n_workers,
                                mpb_slots=config.mpb_slots,
                                cost_fn=config.sim_cost_fn,
-                               params=config.sim_params)
+                               params=config.sim_params,
+                               dep_managers=(config.n_controllers
+                                             if config.dep_manager ==
+                                             "sharded" else None))
         if config.executor == "sharded":
             from .sharded import ShardedExecutor
             return ShardedExecutor(
@@ -136,6 +149,11 @@ class TaskRuntime:
         ``placement.device_assignment`` says they do."""
         assign_homes(ba, self.placement, self.n_controllers)
         ba.traffic = self.traffic
+        register = getattr(self.analyzer, "register_array", None)
+        if register is not None:
+            # sharded dependence manager learns the block -> home map so
+            # footprints route to the owning per-home manager
+            register(ba)
         make_store = getattr(self._exec, "make_store", None)
         if make_store is not None:
             store = make_store(ba)
@@ -300,6 +318,11 @@ class TaskRuntime:
             s.cross_home_bytes = self._exec.cross_home_bytes
             s.local_home_bytes = self._exec.local_home_bytes
             s.owner_overrides = self._exec.owner_overrides
+        # sharded dependence manager: message traffic + per-manager
+        # admissions (duck-typed like the executor extras above)
+        if getattr(self.analyzer, "dep_messages", None) is not None:
+            s.dep_messages = self.analyzer.dep_messages
+            s.manager_admissions = list(self.analyzer.admissions)
         if getattr(self._exec, "last_result", None) is not None:
             s.predicted_total_s = self._exec.predicted_total_s
             # the DES never executes bodies: tile_moves is its *predicted*

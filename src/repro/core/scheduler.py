@@ -80,6 +80,11 @@ class MasterScheduler:
         self.pool = pool
         self.analyzer = analyzer
         self.policy = POLICIES[policy]
+        # sharded dependence manager: ready tasks park in per-home deques
+        # owned by the managers (owner-computes); central path keeps the
+        # single master-side ready queue
+        self._ready_mgr = analyzer if hasattr(analyzer, "push_ready") \
+            else None
         self.block_last_worker: dict = {}
         self._rr_last = -1
         self._rng = random.Random(seed)
@@ -102,6 +107,16 @@ class MasterScheduler:
             self._note_placement(td, wid)
             if self.obs.enabled:
                 self.obs.queue(wid, +1)
+        else:
+            self._park_ready(td)
+
+    def _park_ready(self, td: TaskDescriptor, front: bool = False) -> None:
+        """Park a ready task: in its home manager's deque under the
+        sharded manager, else in the master's local ready queue."""
+        if self._ready_mgr is not None:
+            self._ready_mgr.push_ready(td, front=front)
+        elif front:
+            self.graph.ready.appendleft(td)
         else:
             self.graph.ready.append(td)
 
@@ -135,7 +150,20 @@ class MasterScheduler:
 
     # -- polling-mode functions (i)-(iii) ----------------------------------------
     def drain_ready(self) -> None:
-        """(i) schedule tasks from the local ready queue."""
+        """(i) schedule tasks from the ready queue(s).  Under the sharded
+        dependence manager this drains the per-home deques round-robin
+        (``pop_ready``); centrally it drains the master's local queue."""
+        mgr = self._ready_mgr
+        if mgr is not None:
+            n = mgr.ready_count
+            for _ in range(n):
+                td = mgr.pop_ready()
+                if td is None:
+                    break
+                if not self.schedule_polling(td):
+                    mgr.push_ready(td, front=True)
+                    break
+            return
         n = len(self.graph.ready)
         for _ in range(n):
             if not self.graph.ready:
@@ -169,7 +197,7 @@ class MasterScheduler:
             return False
         td = self.graph.completion.popleft()
         for ready in self.graph.release(td):
-            self.graph.ready.append(ready)
+            self._park_ready(ready)
         self.analyzer.forget_completed(td)
         self.pool.release(td)
         return True

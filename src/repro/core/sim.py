@@ -43,6 +43,11 @@ class SimTask:
     # model charges each controller for the bytes it really serves — the
     # residency semantics the executors measure, consumed by the DES.
     home_bytes: tuple[float, ...] | None = None
+    # footprint blocks behind each home in ``homes`` (same order).  None =
+    # split ``n_blocks`` evenly.  Under sharded dependence management the
+    # per-home managers walk their slices in parallel, so the spawn charge
+    # is the *max* per-manager walk, not the sum — this carries the split.
+    home_blocks: tuple[int, ...] | None = None
 
     # simulation state (reset per run)
     deps_remaining: int = 0
@@ -169,13 +174,18 @@ class SimExecutor(ExecutorBase):
 
     def __init__(self, graph, scheduler, *, n_workers: int = 4,
                  mpb_slots: int = 16, cost_fn=None,
-                 params: SCCParams | None = None):
+                 params: SCCParams | None = None,
+                 dep_managers: int | None = None):
         self.graph = graph
         self.scheduler = scheduler
         self.n_workers = n_workers
         self.mpb_slots = mpb_slots
         self.cost_fn = cost_fn or FlopcountCost()
         self.params = params or SCCParams()
+        # RuntimeConfig.dep_manager="sharded": charge spawns as manager
+        # message traffic + parallel per-home walks instead of one
+        # master-side walk (None = the central §3.3 cost)
+        self.dep_managers = dep_managers
         self.pending = []
         self.last_result: SimResult | None = None
         # fragments compose sequentially (each sync point serializes the
@@ -207,6 +217,7 @@ class SimExecutor(ExecutorBase):
                 owner = m.region.array.home.get(m.region.tile_indices[0], 0)
                 break
         per_home: dict[int, float] = {}
+        per_home_blocks: dict[int, int] = {}
         n_blocks = 0
         for m in td.args:
             n_blocks += len(m.region.block_ids)
@@ -214,6 +225,7 @@ class SimExecutor(ExecutorBase):
             for idx in m.region.tile_indices:
                 h = m.region.array.home.get(idx, 0)
                 per_home[h] = per_home.get(h, 0.0) + block_bytes
+                per_home_blocks[h] = per_home_blocks.get(h, 0) + 1
                 if m.READS and h != owner:
                     self.predicted_tile_moves += 1
         homes = tuple(sorted(per_home)) or (0,)
@@ -222,7 +234,9 @@ class SimExecutor(ExecutorBase):
             homes=homes,
             deps=tuple(p.tid for p in td.preds if p.tid in batch_tids),
             n_blocks=max(n_blocks, 1),
-            home_bytes=tuple(per_home.get(h, 0.0) for h in homes) or None)
+            home_bytes=tuple(per_home.get(h, 0.0) for h in homes) or None,
+            home_blocks=tuple(per_home_blocks.get(h, 0)
+                              for h in homes) or None)
 
     def on_spawn(self, td, ready: bool) -> None:
         self.pending.append(td)
@@ -233,7 +247,8 @@ class SimExecutor(ExecutorBase):
         batch_tids = {td.tid for td in self.pending}
         sim_tasks = [self._to_sim(td, batch_tids) for td in self.pending]
         self.last_result = simulate(sim_tasks, self.n_workers, self.params,
-                                    mpb_slots=self.mpb_slots)
+                                    mpb_slots=self.mpb_slots,
+                                    dep_managers=self.dep_managers)
         self.predicted_total_s += self.last_result.total_s
         if self.obs.enabled:
             # predicted (parallel DES makespan) vs configured cost (the
@@ -265,8 +280,19 @@ def sequential_time(tasks: list[SimTask], p: SCCParams,
 
 def simulate(tasks: list[SimTask], n_workers: int,
              p: SCCParams = SCCParams(), *, mpb_slots: int = 16,
-             placement_aware: bool = True) -> SimResult:
-    """Run the master/worker protocol over the task graph."""
+             placement_aware: bool = True,
+             dep_managers: int | None = None) -> SimResult:
+    """Run the master/worker protocol over the task graph.
+
+    ``dep_managers`` switches the spawn/release charges to sharded
+    dependence management: N per-home managers (manager ``m`` sits at MC
+    ``m % 4``), each walking its slice of the footprint concurrently.  A
+    spawn then costs the base initiation plus one dep_query/dep_grant
+    round-trip per involved manager plus the *max* per-manager metadata
+    walk (they overlap — the distributed-manager win); a release adds one
+    message per involved manager.  ``None`` is the paper's central §3.3
+    walk on the master.
+    """
     master = master_core_choice()
     cores = worker_order(master)[:n_workers]
     workers = [WorkerState(core=c,
@@ -388,11 +414,44 @@ def simulate(tasks: list[SimTask], n_workers: int,
             executed[task.tid] = ft
             completion.append(task)
 
+    def manager_slices(task: SimTask) -> dict[int, float]:
+        """Per-manager footprint block counts for one task (manager =
+        home % dep_managers; even split when the task carries no
+        per-home block counts)."""
+        slices: dict[int, float] = {}
+        blocks = task.home_blocks \
+            if task.home_blocks and len(task.home_blocks) == len(task.homes) \
+            else None
+        for i, h in enumerate(task.homes):
+            m = h % dep_managers
+            b = blocks[i] if blocks else task.n_blocks / len(task.homes)
+            slices[m] = slices.get(m, 0.0) + b
+        return slices
+
+    def spawn_cost(task: SimTask) -> float:
+        """Master-side initiation charge (§3.3): central = base + one
+        walk over the whole footprint; sharded = base + one MPB
+        round-trip per involved manager + the slowest per-manager walk
+        (the walks overlap across managers)."""
+        if not dep_managers:
+            return p.seconds(p.spawn_base_cycles +
+                             p.dep_block_cycles * task.n_blocks)
+        slices = manager_slices(task)
+        t = p.seconds(p.spawn_base_cycles)
+        for m in slices:
+            t += 2.0 * p.mpb_write_s(core_mc_hops(master, m % 4))
+        t += p.seconds(p.dep_block_cycles * max(slices.values()))
+        return t
+
     def release_all(t: float):
         nonlocal master_t
         while completion:
             task = completion.pop()
             master_t += p.seconds(p.release_cycles)
+            if dep_managers:
+                # completion fan-out: one release message per manager
+                for m in manager_slices(task):
+                    master_t += p.mpb_write_s(core_mc_hops(master, m % 4))
             for dep in task.dependents:
                 dep.deps_remaining -= 1
                 if dep.deps_remaining == 0:
@@ -403,8 +462,7 @@ def simulate(tasks: list[SimTask], n_workers: int,
     # it joins the local ready queue and the main program continues --------
     ready.clear()
     for task in pending_spawn:
-        master_t += p.seconds(p.spawn_base_cycles +
-                              p.dep_block_cycles * task.n_blocks)
+        master_t += spawn_cost(task)
         spawned.add(task.tid)
         collect_finished(master_t)
         if task.deps_remaining == 0:

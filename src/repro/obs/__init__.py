@@ -28,8 +28,8 @@ See docs/OBSERVABILITY.md for the event schema and trace workflow.
 """
 from .chrome import chrome_trace, export_chrome_trace, load_jsonl
 from .events import EVENT_FIELDS, EVENT_SCHEMA, Event, validate_event
-from .profiler import profiler_available, trace_span
-from .summary import slowest_waves, summary_table
+from .profiler import profile_session, profiler_available, trace_span
+from .summary import mode_latency, slowest_waves, summary_table
 from .tracker import (NULL_TRACKER, ConsoleTracker, InMemoryTracker,
                       JsonlTracker, NullTracker, Tracker, TrackerBase,
                       make_tracker, validate_spec)
@@ -40,6 +40,6 @@ __all__ = [
     "InMemoryTracker", "JsonlTracker", "ConsoleTracker",
     "make_tracker", "validate_spec",
     "chrome_trace", "export_chrome_trace", "load_jsonl",
-    "slowest_waves", "summary_table",
-    "trace_span", "profiler_available",
+    "slowest_waves", "mode_latency", "summary_table",
+    "trace_span", "profile_session", "profiler_available",
 ]

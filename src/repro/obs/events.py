@@ -35,6 +35,12 @@ Kinds:
   counters (reported at shutdown).
 * ``sim_predict``    — the DES barrier's predicted makespan vs the
   configured serial cost of the same tasks (``sim.sequential_time``).
+* ``dep_msg``        — the sharded dependence manager moved messages over
+  one home's MPB channel (``msg`` is ``dep_query``/``dep_grant``/
+  ``release``).
+* ``manager_admit``  — one per-home manager admitted a footprint slice:
+  which manager, the admitted task, how many dependences its grant
+  carried, and the channel depth at send time.
 * ``stats``          — the runtime's final :class:`RuntimeStats` as its
   schema-tagged dict (``RuntimeStats.to_dict``), emitted at shutdown.
 """
@@ -61,6 +67,8 @@ EVENT_FIELDS: dict[str, frozenset] = {
     "owner_override": frozenset({"wave", "spilled"}),
     "tile_cache": frozenset({"worker", "hits", "misses"}),
     "sim_predict": frozenset({"tasks", "predicted_s", "sequential_s"}),
+    "dep_msg": frozenset({"manager", "msg", "count"}),
+    "manager_admit": frozenset({"manager", "task", "deps", "depth"}),
     "stats": frozenset({"stats"}),
 }
 

@@ -7,12 +7,20 @@ wrap every wave dispatch in :func:`trace_span` — a
 belong to which wave.  Disabled (the default) the span is a shared
 no-op context manager and costs nothing; if the installed jax has no
 TraceAnnotation the hook degrades to the same no-op instead of failing.
+
+:func:`profile_session` is the *session* side of the same story: the
+annotations only land in a trace file if someone started a profiler
+session around the run.  The benchmark driver (``benchmarks.run
+--profile-dir``) and the nightly job use it to bracket app runs with
+``jax.profiler.start_trace``/``stop_trace`` so ``profile_waves`` spans
+end up in uploaded artifacts instead of requiring a hand-started
+TensorBoard session.  Degrades to a no-op when jax lacks the API.
 """
 from __future__ import annotations
 
 import contextlib
 
-__all__ = ["trace_span", "profiler_available"]
+__all__ = ["trace_span", "profile_session", "profiler_available"]
 
 _NULL = contextlib.nullcontext()
 
@@ -39,3 +47,27 @@ def trace_span(label: str, enabled: bool = True):
     if cls is None:
         return _NULL
     return cls(label)
+
+
+@contextlib.contextmanager
+def profile_session(logdir: str | None):
+    """Bracket a region with a ``jax.profiler`` trace session writing to
+    ``logdir``; yields True when a session actually started.
+
+    No-op (yields False) when ``logdir`` is falsy or the installed jax
+    lacks ``start_trace``/``stop_trace`` — callers never need to guard.
+    ``stop_trace`` runs even if the body raises, so partial sessions
+    still flush their trace files for upload."""
+    if not logdir:
+        yield False
+        return
+    try:
+        from jax.profiler import start_trace, stop_trace
+    except Exception:
+        yield False
+        return
+    start_trace(str(logdir))
+    try:
+        yield True
+    finally:
+        stop_trace()

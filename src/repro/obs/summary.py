@@ -8,7 +8,7 @@ from __future__ import annotations
 
 from .events import Event
 
-__all__ = ["slowest_waves", "summary_table"]
+__all__ = ["slowest_waves", "mode_latency", "summary_table"]
 
 
 def slowest_waves(events: list[Event], top: int = 5) -> list[Event]:
@@ -17,6 +17,36 @@ def slowest_waves(events: list[Event], top: int = 5) -> list[Event]:
     waves = [e for e in events if e.kind == "wave_close"]
     waves.sort(key=lambda e: (-e.data["wall_s"], e.data["wave"]))
     return waves[:top]
+
+
+def _percentile(sorted_vals: list[float], q: float) -> float:
+    """Nearest-rank percentile over pre-sorted values (pure python — the
+    trace CLI must not pull numpy in for a table)."""
+    rank = max(int(-(-q * len(sorted_vals) // 100)), 1)   # ceil, >= 1
+    return sorted_vals[rank - 1]
+
+
+def mode_latency(events: list[Event]) -> dict[str, dict]:
+    """Per-dispatch-mode latency histogram from ``dispatch`` events:
+    ``mode -> {count, total_s, p50_s, p99_s}``, modes sorted by name.
+
+    This is the before/after axis for dispatch-path work (e.g. jit vs
+    vmap vs shard_map): the same trace answers "where did the wall time
+    go" per mode, with tail latency (p99) next to the median."""
+    by_mode: dict[str, list[float]] = {}
+    for e in events:
+        if e.kind == "dispatch":
+            by_mode.setdefault(e.data["mode"], []).append(e.data["wall_s"])
+    out: dict[str, dict] = {}
+    for mode in sorted(by_mode):
+        walls = sorted(by_mode[mode])
+        out[mode] = {
+            "count": len(walls),
+            "total_s": sum(walls),
+            "p50_s": _percentile(walls, 50),
+            "p99_s": _percentile(walls, 99),
+        }
+    return out
 
 
 def summary_table(events: list[Event], top: int = 5) -> str:
@@ -43,4 +73,13 @@ def summary_table(events: list[Event], top: int = 5) -> str:
                 f"| {d['wave']} | {d['executor']} | {d['tasks']} | "
                 f"{d['dispatches']} | {d['wall_s']:.4f} | "
                 f"{d['bytes_moved']} | {d['bytes_staged']} |")
+    modes = mode_latency(events)
+    if modes:
+        lines.append("")
+        lines.append("| mode | dispatches | total s | p50 s | p99 s |")
+        lines.append("|---|---|---|---|---|")
+        for mode, h in modes.items():
+            lines.append(
+                f"| {mode} | {h['count']} | {h['total_s']:.4f} | "
+                f"{h['p50_s']:.4f} | {h['p99_s']:.4f} |")
     return "\n".join(lines)

@@ -1,0 +1,398 @@
+"""Home-sharded dependence management (``repro.core.depman``).
+
+The sharded manager must be *protocol-compatible* with the central
+analyzer (same dependence sets, same counters, same cleanup) while
+admitting each home's footprint slice independently over MPB channels.
+These tests pin that equivalence three ways: unit parity on constructed
+streams (including the WAR-with-interleaved-completion orderings the
+fused single-pass walk has to get right), the streaming leak bound on
+both managers, and the determinism pin — central and sharded runtimes
+produce bit-identical wave schedules on every paper app.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from benchmarks.apps import APPS, run_app
+from benchmarks.spawn_throughput import build_array, run_matrix, run_stream
+from repro.core import (In, InOut, Out, RuntimeConfig, TaskRuntime,
+                        ShardedDependenceManager, task)
+from repro.core.depman import DepMessage, HomeManager
+from repro.core.deps import DependenceAnalyzer
+from repro.core.executor import StagedExecutor
+from repro.core.graph import DescriptorPool, TaskGraph
+from repro.core.mpb import MPBChannel
+from repro.core.placement import assign_homes
+
+
+def _noop(*_a, **_k):
+    return None
+
+
+def _sharded(ba, n=4):
+    mgr = ShardedDependenceManager(n_managers=n)
+    mgr.register_array(ba)
+    return mgr
+
+
+class _Stream:
+    """A tiny driver running one footprint script through one analyzer:
+    ``spawn`` analyzes + inserts, ``done`` completes + forgets (the same
+    lifecycle the runtime drives), recording each task's dep tids."""
+
+    def __init__(self, analyzer):
+        self.analyzer = analyzer
+        self.pool = DescriptorPool(capacity=256)
+        self.graph = TaskGraph()
+        self.tds: dict[str, object] = {}
+        self.deps: dict[str, list[int]] = {}
+
+    def spawn(self, name, *args):
+        td = self.pool.acquire(_noop, tuple(args))
+        td.spawn_order = len(self.tds)
+        found = self.analyzer.analyze(td)
+        self.graph.insert(td, found)
+        self.tds[name] = td
+        self.deps[name] = sorted(d.tid for d in found)
+        return td
+
+    def done(self, name):
+        td = self.tds[name]
+        self.graph.mark_executed(td)
+        self.graph.release(td)
+        self.analyzer.forget_completed(td)
+
+
+def _both(ba_central, ba_sharded, script, n=4):
+    """Run ``script`` through central and sharded; the recorded dep tids
+    must match task for task (same pool => same tids)."""
+    runs = []
+    for analyzer, ba in ((DependenceAnalyzer(), ba_central),
+                         (_sharded(ba_sharded, n), ba_sharded)):
+        s = _Stream(analyzer)
+        script(s, ba)
+        runs.append(s)
+    central, sharded = runs
+    assert central.deps == sharded.deps
+    return central, sharded
+
+
+def _grid(homes=4):
+    ba = build_array(8, homes, seg=4)       # 8x4 blocks, row-banded
+    return ba
+
+
+# ---------------------------------------------------------------------------
+class TestMPBChannel:
+    def test_fifo_and_len(self):
+        ch = MPBChannel("t", n_slots=4)
+        for i in range(3):
+            assert ch.try_send(i)
+        assert len(ch) == 3
+        assert ch.recv_all() == [0, 1, 2]
+        assert len(ch) == 0
+
+    def test_backpressure_counts_stalls(self):
+        ch = MPBChannel("t", n_slots=2)
+        assert ch.try_send("a") and ch.try_send("b")
+        assert not ch.try_send("c")            # ring full
+        assert ch.full_stalls == 1
+        assert ch.sends == 2
+        assert ch.recv_all() == ["a", "b"]
+        assert ch.try_send("c")                # space again
+
+    def test_recv_all_drains_once(self):
+        ch = MPBChannel("t")
+        ch.try_send(1)
+        assert ch.recv_all() == [1]
+        assert ch.recv_all() == []
+
+
+# ---------------------------------------------------------------------------
+# unit parity: the sharded protocol finds the central analyzer's deps
+class TestShardedParity:
+    def test_raw_waw_war_chain(self):
+        def script(s, ba):
+            s.spawn("w1", InOut(ba[0, 0:4]))
+            s.spawn("r1", In(ba[0, 0:4]), InOut(ba[1, 0:4]))
+            s.spawn("w2", InOut(ba[0, 0:4]))     # RAW->w1? no: WAW + WAR
+            assert s.deps["r1"] == [s.tds["w1"].tid]
+            assert sorted(s.deps["w2"]) == sorted(
+                [s.tds["w1"].tid, s.tds["r1"].tid])
+
+        _both(_grid(), _grid(), script)
+
+    def test_war_with_interleaved_reader_completion(self):
+        """A reader that completed (and was forgotten) before the writer
+        arrives contributes no WAR edge; a reader that completed but is
+        not yet forgotten is filtered by liveness — both orderings must
+        match central exactly."""
+        def script(s, ba):
+            s.spawn("r1", In(ba[0, 0:4]), InOut(ba[1, 0:4]))
+            s.spawn("r2", In(ba[0, 0:4]), InOut(ba[2, 0:4]))
+            s.done("r1")                         # completed + forgotten
+            s.graph.mark_executed(s.tds["r2"])   # completed, NOT forgotten
+            s.spawn("w", InOut(ba[0, 0:4]))
+            assert s.deps["w"] == []             # both readers are done
+
+        _both(_grid(), _grid(), script)
+
+    def test_war_orders_live_readers(self):
+        def script(s, ba):
+            s.spawn("r1", In(ba[0, 0:4]), InOut(ba[1, 0:4]))
+            s.spawn("r2", In(ba[0, 0:4]), InOut(ba[2, 0:4]))
+            s.done("r1")
+            s.spawn("w", InOut(ba[0, 0:4]))
+            assert s.deps["w"] == [s.tds["r2"].tid]   # only the live one
+
+        _both(_grid(), _grid(), script)
+
+    def test_same_block_two_modes_no_self_dep(self):
+        """(Out, In) on one block within one task: the fused walk must
+        not order the task after itself, and downstream tasks see it as
+        the writer — like central's two-pass walk."""
+        def script(s, ba):
+            s.spawn("t", Out(ba[0, 0:4]), In(ba[0, 0:4]))
+            assert s.deps["t"] == []
+            s.spawn("r", In(ba[0, 0:4]), InOut(ba[1, 0:4]))
+            assert s.deps["r"] == [s.tds["t"].tid]
+
+        _both(_grid(), _grid(), script)
+
+    def test_cross_home_predecessor_counts_once(self):
+        """A predecessor spanning two homes is granted by both managers
+        but is one dependence — deps_found must match central."""
+        def script(s, ba):
+            s.spawn("w", Out(ba[0:2, 0]))        # rows 0+1: homes 0 and 1
+            s.spawn("r", In(ba[0:2, 0]), Out(ba[2, 0]))
+            assert s.deps["r"] == [s.tds["w"].tid]
+
+        central, sharded = _both(_grid(), _grid(), script)
+        assert central.analyzer.deps_found == sharded.analyzer.deps_found \
+            == 1
+
+    def test_blocks_walked_matches_central(self):
+        def script(s, ba):
+            s.spawn("a", InOut(ba[0, 0:4]), In(ba[1, 0:4]))
+            s.spawn("b", In(ba[0, 0:4]), Out(ba[3, 0:4]))
+            s.done("a")
+
+        central, sharded = _both(_grid(), _grid(), script)
+        assert central.analyzer.blocks_walked \
+            == sharded.analyzer.blocks_walked == 16
+
+    def test_tasks_touching_modes(self):
+        for n in (1, 4):
+            ba = _grid(n)
+            mgr = _sharded(ba, n)
+            s = _Stream(mgr)
+            w = s.spawn("w", InOut(ba[0, 0:4]))
+            r = s.spawn("r", In(ba[1, 0:4]), Out(ba[2, 0:4]))
+            blocks = list(ba[0:2, 0:4].block_ids)
+            assert mgr.tasks_touching(blocks, "in") == {w}
+            assert mgr.tasks_touching(blocks, "out") == {w, r}
+            assert mgr.tasks_touching(blocks, "inout") == {w, r}
+            s.done("w")
+            assert mgr.tasks_touching(blocks, "in") == set()
+            with pytest.raises(ValueError):
+                mgr.tasks_touching(blocks, "rw")
+
+    def test_route_cache_invalidated_on_register(self):
+        ba = _grid(4)
+        mgr = _sharded(ba, 4)
+        s = _Stream(mgr)
+        td = s.spawn("w", Out(ba[1, 0:4]))
+        assert mgr.owner_of(td) == 1             # row-banded: row 1 home 1
+        assign_homes(ba, "single", 4)            # re-place: all home 0
+        mgr.register_array(ba)                   # clears the route cache
+        td2 = s.spawn("w2", Out(ba[1, 0:4]))
+        assert mgr.owner_of(td2) == 0
+
+    def test_grant_ring_overflow_raises(self):
+        ba = _grid(2)
+        mgr = _sharded(ba, 2)
+        td = DescriptorPool(capacity=4).acquire(_noop, (Out(ba[0, 0:4]),))
+        td.spawn_order = 0
+        # violate the drain-after-pump invariant by hand: a stuffed grant
+        # ring must fail loudly, never drop a dependence set
+        while mgr.grants[0].try_send(DepMessage("dep_grant", 0, td, set())):
+            pass
+        with pytest.raises(RuntimeError, match="overflow"):
+            mgr._post(0, DepMessage("dep_query", 0, td,
+                                    [(False, True,
+                                      list(ba[0, 0:4].block_ids))]))
+            mgr._pump(0)
+
+
+# ---------------------------------------------------------------------------
+# the monotonic-growth regression (ISSUE 7 satellite): block metadata for
+# fully retired tasks must be dropped on both managers
+class TestForgetReclaims:
+    def test_streaming_live_blocks_return_to_zero(self):
+        ba = build_array(16, 4, seg=4)
+        for analyzer in (DependenceAnalyzer(), _sharded(ba, 4)):
+            r = run_stream(2000, analyzer, ba, window=64)
+            assert r["live_blocks"] == 0         # every entry reclaimed
+        assert len(analyzer._live_parts) == 0    # sharded: slices freed
+
+    def test_central_meta_stays_bounded(self):
+        ba = build_array(16, 1, seg=4)
+        analyzer = DependenceAnalyzer()
+        run_stream(1000, analyzer, ba, window=32)
+        assert len(analyzer._meta) == 0
+
+
+# ---------------------------------------------------------------------------
+# runtime integration
+class TestRuntimeIntegration:
+    def test_config_validates_dep_manager(self):
+        with pytest.raises(ValueError, match="dep_manager"):
+            RuntimeConfig(dep_manager="bogus").validate()
+
+    def test_sharded_stats_carry_manager_counters(self):
+        @task(inout="x")
+        def bump(x):
+            return x + 1.0
+
+        with TaskRuntime(RuntimeConfig(executor="staged",
+                                       dep_manager="sharded")) as rt:
+            A = rt.zeros((8, 8), (4, 4))
+            for _ in range(3):
+                bump(A[0, 0])
+                bump(A[1, 1])
+            rt.barrier()
+            s = rt.stats()
+        assert s.dep_messages > 0
+        assert sum(s.manager_admissions) == s.tasks_spawned == 6
+        np.testing.assert_allclose(np.asarray(A.gather())[:4, :4], 3.0)
+
+    def test_central_stats_leave_manager_fields_none(self):
+        @task(inout="x")
+        def bump(x):
+            return x + 1.0
+
+        with TaskRuntime(RuntimeConfig(executor="staged")) as rt:
+            A = rt.zeros((4, 4), (4, 4))
+            bump(A[0, 0])
+            rt.barrier()
+            s = rt.stats()
+        assert s.dep_messages is None
+        assert s.manager_admissions is None
+
+    def test_manager_events_emitted_when_tracked(self):
+        from repro.obs import InMemoryTracker
+
+        @task(inout="x")
+        def bump(x):
+            return x + 1.0
+
+        trk = InMemoryTracker()
+        with TaskRuntime(RuntimeConfig(executor="staged",
+                                       dep_manager="sharded",
+                                       tracker=trk)) as rt:
+            A = rt.zeros((8, 8), (4, 4))
+            bump(A[0, 0])
+            bump(A[1, 1])
+            rt.barrier()
+        admits = trk.events_of("manager_admit")
+        msgs = trk.events_of("dep_msg")
+        assert len(admits) == 2
+        assert {e.data["msg"] for e in msgs} >= {"dep_query", "dep_grant",
+                                                 "release"}
+
+    @pytest.mark.parametrize("execu", ["sequential", "host", "staged",
+                                       "sharded"])
+    def test_gather_matches_central(self, execu):
+        @task(inout="c", in_=("a", "b"))
+        def gemm(c, a, b):
+            return c + a @ b
+
+        outs = []
+        for dm in ("central", "sharded"):
+            with TaskRuntime(RuntimeConfig(executor=execu, n_workers=2,
+                                           dep_manager=dm)) as rt:
+                A = rt.full((8, 8), (4, 4), 2.0)
+                B = rt.full((8, 8), (4, 4), 3.0)
+                C = rt.zeros((8, 8), (4, 4))
+                for i in range(2):
+                    for j in range(2):
+                        for k in range(2):
+                            gemm(C[i, j], A[i, k], B[k, j])
+                rt.barrier()
+                outs.append(np.asarray(C.gather()))
+        np.testing.assert_array_equal(outs[0], outs[1])
+
+
+# ---------------------------------------------------------------------------
+# the determinism pin: central and sharded managers schedule identical
+# waves (same tids, same order) on every paper app — the acceptance bar
+# for swapping dependence management out from under the executors
+SIZES = {
+    "black_scholes": {"n_options": 2048, "task_options": 256},
+    "matmul": {"n": 128, "tile": 32},
+    "fft": {"n": 64, "row_block": 16, "tile": 16},
+    "jacobi": {"n": 128, "tile": 32, "iters": 2},
+    "cholesky": {"n": 128, "tile": 32},
+}
+
+
+@pytest.mark.parametrize("app", sorted(APPS))
+def test_identical_wave_schedule_on_apps(app, monkeypatch):
+    orig = StagedExecutor._wavefronts
+    schedules = {}
+    for dm in ("central", "sharded"):
+        log: list = []
+
+        def spy(self, tasks, _log=log):
+            waves = orig(self, tasks)
+            _log.append([tuple(t.tid for t in w) for w in waves])
+            return waves
+
+        monkeypatch.setattr(StagedExecutor, "_wavefronts", spy)
+        run_app(app, "staged", app_kwargs=SIZES[app], dep_manager=dm)
+        schedules[dm] = log
+    assert schedules["central"] == schedules["sharded"]
+    assert any(schedules["central"])             # the spy saw real waves
+
+
+# ---------------------------------------------------------------------------
+# spawn-throughput benchmark plumbing (the bench artifact entry)
+class TestSpawnThroughputBench:
+    def test_run_matrix_checksums_agree(self):
+        res = run_matrix(400, [1, 2, 4], grid=16, seg=4, reps=1)
+        c = res["central"]
+        assert c["deps_found"] > 0
+        for h, r in res["sharded"].items():
+            assert r["dep_checksum"] == c["dep_checksum"]
+            assert r["deps_found"] == c["deps_found"]
+            assert r["blocks_walked"] == c["blocks_walked"]
+            assert sum(r["admissions"]) >= 400
+
+    def test_entry_shape_is_bench_compatible(self, monkeypatch):
+        import importlib.util
+        import pathlib
+
+        import benchmarks.spawn_throughput as st
+
+        spec = importlib.util.spec_from_file_location(
+            "bench_gate",
+            pathlib.Path(__file__).parent.parent / "tools" / "bench_gate.py")
+        gate = importlib.util.module_from_spec(spec)
+        spec.loader.exec_module(gate)
+
+        monkeypatch.setattr(
+            st, "run_matrix",
+            lambda n, homes, grid=64, seg=8, reps=3: {
+                "tasks": n, "grid": grid, "seg": seg,
+                "central": {"tasks": n, "deps_found": 1.0,
+                            "blocks_walked": 2.0, "tasks_per_s": 10.0},
+                "sharded": {h: {"tasks_per_s": 10.0, "dep_messages": 3.0}
+                            for h in homes},
+            })
+        e = st.entry("smoke")
+        assert e["id"] == "spawn-throughput-smoke"
+        doc = {"schema": gate.SCHEMA, "suite": "smoke",
+               "calibration": {},
+               "validation": {"checks": {}, "passed": 0, "total": 0},
+               "entries": [e]}
+        assert gate.validate_schema(doc) == []

@@ -30,8 +30,8 @@ from repro.obs import (EVENT_FIELDS, EVENT_SCHEMA, ConsoleTracker, Event,
                        InMemoryTracker, JsonlTracker, NULL_TRACKER,
                        NullTracker, Tracker, chrome_trace,
                        export_chrome_trace, load_jsonl, make_tracker,
-                       slowest_waves, summary_table, trace_span,
-                       validate_event, validate_spec)
+                       mode_latency, slowest_waves, summary_table,
+                       trace_span, validate_event, validate_spec)
 
 
 @task(inout="c", in_=("a", "b"))
@@ -72,7 +72,10 @@ class TestEventSchema:
         assert set(EVENT_FIELDS) == {
             "trace_header", "wave_open", "wave_close", "dispatch",
             "queue_depth", "owner_override", "tile_cache", "sim_predict",
-            "stats"}
+            "dep_msg", "manager_admit", "stats"}
+        assert EVENT_FIELDS["dep_msg"] == {"manager", "msg", "count"}
+        assert EVENT_FIELDS["manager_admit"] == {
+            "manager", "task", "deps", "depth"}
         assert EVENT_FIELDS["wave_close"] == {
             "wave", "executor", "tasks", "wall_s", "dispatches",
             "tile_moves", "bytes_moved", "bytes_staged"}
@@ -381,6 +384,37 @@ class TestSummary:
         assert "**trace**" in table
         assert "| wave | executor |" in table
         assert table.count("\n| ") >= 3       # header sep + 2 wave rows
+
+    def _dispatch(self, mode, wall):
+        return Event("dispatch", 0.0,
+                     {"wave": 0, "executor": "staged", "fn": "f",
+                      "tasks": 1, "mode": mode, "wall_s": wall})
+
+    def test_mode_latency_percentiles(self):
+        # 100 jit dispatches at 1..100ms: nearest-rank p50=50ms p99=99ms
+        evs = [self._dispatch("jit", i / 1000) for i in range(1, 101)]
+        evs.append(self._dispatch("vmap", 0.5))
+        hist = mode_latency(evs)
+        assert list(hist) == ["jit", "vmap"]      # sorted by mode
+        assert hist["jit"]["count"] == 100
+        assert hist["jit"]["p50_s"] == pytest.approx(0.050)
+        assert hist["jit"]["p99_s"] == pytest.approx(0.099)
+        assert hist["vmap"] == {"count": 1, "total_s": 0.5,
+                                "p50_s": 0.5, "p99_s": 0.5}
+
+    def test_mode_latency_in_summary_table(self):
+        trk = InMemoryTracker()
+        _gemm_run("staged", trk)
+        table = summary_table(trk.events, top=5)
+        assert "| mode | dispatches |" in table
+        modes = mode_latency(trk.events)
+        assert modes                              # staged run dispatched
+        assert sum(h["count"] for h in modes.values()) \
+            == len(trk.events_of("dispatch"))
+
+    def test_mode_latency_empty_without_dispatches(self):
+        assert mode_latency([]) == {}
+        assert "| mode |" not in summary_table([])
 
 
 # ---------------------------------------------------------------------------
