@@ -150,6 +150,19 @@ def bench_table(doc: dict) -> str:
                           for r in e["rows"])
         out.append(f"\ngranularity (tile→speedup): {sweep} "
                    f"(best: {e['info']['best_tile']})")
+    kb = by_kind.get("kernel_backend", [])
+    if kb:
+        # dispatch/fallback counts are the gated quantities; wall clocks
+        # are informational (interpret-mode pallas on CPU runners)
+        out.append("\n| kernel backend sweep | waves | fused dispatches "
+                   "| fallbacks | xla wall s | pallas wall s |")
+        out.append("|---|---|---|---|---|---|")
+        for e in kb:
+            m, i = e["metrics"], e["info"]
+            out.append(
+                f"| {e['id'].split('/', 1)[1]} | {m['waves']} | "
+                f"{m['kernel_dispatches']} | {m['kernel_fallbacks']} | "
+                f"{i['wall_s_xla']:.2f} | {i['wall_s_pallas']:.2f} |")
     t = doc.get("timings")
     if t:
         staged = ", ".join(f"{app} {v:.2f}s"

@@ -196,6 +196,55 @@ def app_entries(cfg: dict, report, sim_params=None,
     return entries
 
 
+# apps in the kernel-backend sweep: every wave is rectangular and
+# homogeneous, so the pallas backend must fuse them all — a fallback
+# here means the eligibility rules or the grouping signature regressed
+KERNEL_SWEEP_APPS = ("matmul", "jacobi")
+
+
+def kernel_backend_entries(cfg: dict, report) -> list[dict]:
+    """The staged executor's two dispatch backends side by side: XLA
+    vmap/jit vs the fused pallas wave kernels (one ``pallas_call`` grid
+    per wave group).  Wall clocks are informational only — on CPU CI the
+    pallas path runs in interpret mode, which is a correctness harness,
+    not a perf claim.  The *gated* metrics are the deterministic
+    dispatch/fallback counts; both runs self-verify numerics inside
+    ``run_app``."""
+    from .apps import run_app
+
+    entries = []
+    workers = cfg["app_workers"]
+    for name in KERNEL_SWEEP_APPS:
+        kw = cfg["app_sizes"].get(name, {})
+        t0 = time.perf_counter()
+        xla = run_app(name, "staged", app_kwargs=kw, n_workers=workers)
+        wall_xla = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        pal = run_app(name, "staged", app_kwargs=kw, n_workers=workers,
+                      kernel_backend="pallas")
+        wall_pal = time.perf_counter() - t0
+        report(f"kernel_backend_{name}", "wall_s_xla", round(wall_xla, 3))
+        report(f"kernel_backend_{name}", "wall_s_pallas",
+               round(wall_pal, 3))
+        report(f"kernel_backend_{name}", "kernel_dispatches",
+               pal.kernel_dispatches)
+        report(f"kernel_backend_{name}", "kernel_fallbacks",
+               pal.kernel_fallbacks)
+        entries.append({
+            "id": f"kernel_backend/{name}",
+            "kind": "kernel_backend",
+            "info": {"sizes": kw, "n_workers": workers,
+                     "wall_s_xla": wall_xla, "wall_s_pallas": wall_pal},
+            "metrics": {
+                "kernel_dispatches": pal.kernel_dispatches,
+                "kernel_fallbacks": pal.kernel_fallbacks,
+                "waves": pal.waves,
+                "grouped_dispatches": xla.grouped_dispatches,
+            },
+        })
+    return entries
+
+
 def build_bench(suite: str, *, skip_roofline: bool = True,
                 report=_report,
                 owner_skew: float | None = None,
@@ -256,6 +305,7 @@ def build_bench(suite: str, *, skip_roofline: bool = True,
         if tracker is not None:
             tracker.close()
             report("trace", "events", tracker.records_written)
+    kb = kernel_backend_entries(cfg, report)
     over = runtime_overheads(report)
 
     # 4. master-side admission throughput: central analyzer vs the
@@ -300,6 +350,7 @@ def build_bench(suite: str, *, skip_roofline: bool = True,
                     "peak_speedup": gran[best]["speedup"]},
     })
     entries.extend(apps)
+    entries.extend(kb)
     entries.append({
         "id": "runtime_overhead",
         "kind": "overhead",
@@ -350,6 +401,12 @@ def build_bench(suite: str, *, skip_roofline: bool = True,
         "no_operand_staging": all(
             e["metrics"]["bytes_staged"] == 0
             for e in entries if e["kind"] == "app"),
+        # the pallas wave-kernel backend fuses every wave of the
+        # rectangular apps (no silent degradation to the XLA fallback)
+        "pallas_backend_fuses": all(
+            e["metrics"]["kernel_fallbacks"] == 0
+            and e["metrics"]["kernel_dispatches"] > 0
+            for e in kb),
     }
     if cfg["paper_ranges"]:
         checks.update({

@@ -159,6 +159,15 @@ class RuntimeConfig:
       one home — the paper's Fig 4 contention, dodged at schedule time.
     * ``group_waves`` — staged/sharded executors: fuse identical tile
       tasks of a wavefront into one batched dispatch.
+    * ``kernel_backend`` — how a grouped wave dispatches: ``"xla"`` (the
+      default vmap/shard_map path) or ``"pallas"`` (lower each eligible
+      group into one fused ``pl.pallas_call`` whose grid axis is the task
+      axis — ``core/wavekernel.py``, the §3.2 on-chip staging analogue).
+      Ineligible groups automatically fall back to the XLA path; the
+      runtime counts them in ``RuntimeStats.kernel_fallbacks`` and tags
+      each decision with a ``kernel_dispatch`` tracker event.  The sim
+      executor uses the same eligibility to predict which waves fuse and
+      charges their write-back traffic at on-chip (MPB) cost.
     * ``sim_cost_fn`` — "sim" executor: ``td -> (flops, bytes)``; the
       descriptor carries the task's footprint *and* its firstprivate
       ``values``, so costs may depend on index parameters.  Defaults to
@@ -193,6 +202,7 @@ class RuntimeConfig:
     n_controllers: int = 4
     owner_skew_threshold: float = 0.0
     group_waves: bool = True
+    kernel_backend: str = "xla"
     seed: int = 0
     sim_cost_fn: Callable | None = None
     sim_params: object | None = None
@@ -211,6 +221,9 @@ class RuntimeConfig:
         if self.dep_manager not in ("central", "sharded"):
             raise ValueError(f"dep_manager must be 'central' or 'sharded', "
                              f"got {self.dep_manager!r}")
+        if self.kernel_backend not in ("xla", "pallas"):
+            raise ValueError(f"kernel_backend must be 'xla' or 'pallas', "
+                             f"got {self.kernel_backend!r}")
         for fld in ("n_workers", "mpb_slots", "pool_capacity",
                     "n_controllers"):
             if getattr(self, fld) < 1:
@@ -268,6 +281,12 @@ class RuntimeStats:
     # staged / sharded executors
     waves: int | None = None
     grouped_dispatches: int | None = None
+    # wave-kernel backend (kernel_backend="pallas"): groups fused into one
+    # pallas grid vs groups that took the XLA fallback (both None under
+    # kernel_backend="xla", where the layer is inert).  The sim executor
+    # fills the same fields with its *predicted* fuse/fallback split.
+    kernel_dispatches: int | None = None
+    kernel_fallbacks: int | None = None
     # sharded executor: owner-computes traffic accounting (§4.1-§4.2
     # generalized — cross-home bytes are what the DES charges contention
     # for) plus how many grouped dispatches went through the

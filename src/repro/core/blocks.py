@@ -31,6 +31,7 @@ import numpy as np
 
 __all__ = [
     "BlockArray",
+    "FootprintSpec",
     "Region",
     "In",
     "Out",
@@ -370,6 +371,27 @@ class BlockArray:
 
 
 @dataclass(frozen=True)
+class FootprintSpec:
+    """The static per-task tile view a wave kernel's ``BlockSpec`` is built
+    from: element ``shape`` (the region's assembled extent), canonical
+    ``dtype`` string, and the tile grid the region spans.  Produced by
+    :meth:`Region.footprint_spec`; consumed by ``core/wavekernel.py`` for
+    eligibility (rank/dtype homogeneity) and for sizing the per-task
+    blocks of the fused pallas grid."""
+    shape: tuple[int, ...]
+    dtype: str
+    tile_grid: tuple[int, ...]
+
+    @property
+    def rank(self) -> int:
+        return len(self.shape)
+
+    @property
+    def n_tiles(self) -> int:
+        return int(np.prod(self.tile_grid)) if self.tile_grid else 1
+
+
+@dataclass(frozen=True)
 class Region:
     """A rectangular range of tiles of one BlockArray — a task footprint item."""
     array: BlockArray
@@ -393,6 +415,13 @@ class Region:
     @property
     def nbytes(self) -> int:
         return int(np.prod(self.shape)) * jnp.dtype(self.array.dtype).itemsize
+
+    def footprint_spec(self) -> FootprintSpec:
+        """The static tile-view description handed to wave-kernel
+        ``BlockSpec`` construction (regions are rectangular tile ranges by
+        construction, so shape/grid are exact, never bounding boxes)."""
+        return FootprintSpec(self.shape, str(jnp.dtype(self.array.dtype)),
+                             tuple(len(r) for r in self.ranges))
 
     def materialize(self, device=None):
         """Assemble this region's tiles into one array (task input value).

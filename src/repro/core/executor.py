@@ -30,6 +30,7 @@ import numpy as np
 from repro.obs.profiler import trace_span
 from repro.obs.tracker import NULL_TRACKER
 
+from . import wavekernel
 from .api import suspend_runtime_scope
 from .graph import TaskDescriptor, TaskGraph, TaskState, normalize_outputs
 from .mpb import MPBQueue
@@ -286,15 +287,19 @@ class StagedExecutor(ExecutorBase):
     kind = "staged"
 
     def __init__(self, graph: TaskGraph, scheduler: MasterScheduler,
-                 group: bool = True):
+                 group: bool = True, kernel_backend: str = "xla"):
         self.graph = graph
         self.scheduler = scheduler
         self.group = group
+        self.kernel_backend = kernel_backend
         self.pending: list[TaskDescriptor] = []
         self._vjit: dict[Callable, Callable] = {}
         self._jit: dict[Callable, Callable] = {}
+        self._pjit: dict[tuple, Callable] = {}   # built wave kernels
         self.waves_run = 0
         self.grouped_dispatches = 0
+        self.kernel_dispatches = 0     # groups fused into one pallas grid
+        self.kernel_fallbacks = 0      # pallas-requested groups gone XLA
         self._dispatches = 0           # all dispatch events this executor
         self._wave_id = 0              # current wave (event correlation)
         self._last_mode = "jit"        # how the last group dispatched
@@ -368,22 +373,12 @@ class StagedExecutor(ExecutorBase):
         return waves
 
     def _sig(self, td: TaskDescriptor):
-        """The grouping key: function identity plus the *structure* of the
-        footprint and the firstprivate values (shapes/dtypes, never the
-        values themselves) — tasks that differ only in region contents or
-        index values share one batched dispatch."""
-        parts = [td.fn]
-        for m in td.args:
-            parts.append((type(m).__name__, m.region.shape,
-                          str(m.region.array.dtype)))
-        for v in td.values:
-            # structure only, no device transfer on the dispatch critical
-            # path; the canonical dtype (what jnp.asarray will stage the
-            # value to) is the key, so a Python float and an np.float32
-            # from different spawn sites still share one dispatch
-            dt = jax.dtypes.canonicalize_dtype(np.result_type(v))
-            parts.append(("firstprivate", np.shape(v), str(dt)))
-        return tuple(parts)
+        """The grouping key — shared with the wave-kernel layer and the
+        DES's fused-wave predictor, so it lives in ``wavekernel.py``
+        (:func:`~repro.core.wavekernel.group_signature`): tasks that
+        differ only in region contents or index values share one batched
+        dispatch."""
+        return wavekernel.group_signature(td)
 
     def _jitted(self, fn: Callable) -> Callable:
         jfn = self._jit.get(fn)
@@ -449,6 +444,11 @@ class StagedExecutor(ExecutorBase):
                 td, tuple(stacked[i] for stacked in result))
 
     def _run_group(self, group: list[TaskDescriptor]) -> None:
+        if self.kernel_backend == "pallas":
+            reason = self._try_wave_kernel(group)
+            if reason is None:
+                return                 # fused pallas grid dispatched
+            self._note_kernel_fallback(group, reason)
         fn = group[0].fn
         if len(group) == 1 or not self.group:
             jfn = self._jitted(fn)
@@ -465,6 +465,62 @@ class StagedExecutor(ExecutorBase):
         with suspend_runtime_scope():    # tracing runs fn on this thread
             result = vfn(*ins)
         self._store_group(group, result)
+
+    # -- the pallas wave-kernel backend (kernel_backend="pallas") -------------
+    def _try_wave_kernel(self, group: list[TaskDescriptor]) -> str | None:
+        """Dispatch the group as one fused pallas grid if it qualifies.
+        Returns None on success (results committed), else the fallback
+        reason — the caller then takes the XLA path, which stays the
+        reference oracle for everything the lowering does not cover."""
+        if not self.group:
+            return "ungrouped"
+        reason = wavekernel.eligibility(group)
+        if reason is not None:
+            return reason
+        td = group[0]
+        label = td.name or td.fn.__name__
+        for t in group:
+            t.state = TaskState.RUNNING
+        ins = self._stack_group(group)
+        key = (td.fn, len(group),
+               tuple((tuple(x.shape), str(x.dtype)) for x in ins))
+        try:
+            pfn = self._pjit.get(key)
+            if pfn is None:
+                in_structs = [jax.ShapeDtypeStruct(x.shape[1:], x.dtype)
+                              for x in ins]
+                out_structs = wavekernel.infer_out_structs(
+                    td.fn, in_structs, len(td.outputs), label)
+                pfn = self._pjit[key] = wavekernel.build_wave_kernel(
+                    td.fn, len(group), in_structs, out_structs,
+                    interpret=wavekernel.interpret_mode(), label=label)
+            with suspend_runtime_scope():   # tracing runs fn on this thread
+                result = pfn(*ins)
+        except Exception:
+            # untraceable body, unsupported op under the pallas
+            # interpreter, compiler limits... — every lowering failure
+            # degrades to the XLA path, where a genuine task-body error
+            # resurfaces to the user unchanged
+            return "lowering_failed"
+        self._last_mode = "pallas"
+        self.kernel_dispatches += 1
+        if self.obs.enabled:
+            self.obs.emit("kernel_dispatch", wave=self._wave_id,
+                          executor=self.kind, fn=label, tasks=len(group),
+                          backend="pallas", reason="")
+        self._store_group(group, result)
+        return None
+
+    def _note_kernel_fallback(self, group: list[TaskDescriptor],
+                              reason: str) -> None:
+        """Account one pallas-requested group that takes the XLA path."""
+        self.kernel_fallbacks += 1
+        if self.obs.enabled:
+            td = group[0]
+            self.obs.emit("kernel_dispatch", wave=self._wave_id,
+                          executor=self.kind,
+                          fn=td.name or td.fn.__name__, tasks=len(group),
+                          backend="xla", reason=reason)
 
     # -- wave instrumentation -------------------------------------------------
     def _traffic_snapshot(self) -> tuple[int, int, int]:

@@ -130,15 +130,18 @@ class TaskRuntime:
                                params=config.sim_params,
                                dep_managers=(config.n_controllers
                                              if config.dep_manager ==
-                                             "sharded" else None))
+                                             "sharded" else None),
+                               kernel_backend=config.kernel_backend)
         if config.executor == "sharded":
             from .sharded import ShardedExecutor
             return ShardedExecutor(
                 self.graph, self.scheduler, group=config.group_waves,
                 n_homes=config.n_controllers,
-                owner_skew_threshold=config.owner_skew_threshold)
+                owner_skew_threshold=config.owner_skew_threshold,
+                kernel_backend=config.kernel_backend)
         return StagedExecutor(self.graph, self.scheduler,
-                              group=config.group_waves)
+                              group=config.group_waves,
+                              kernel_backend=config.kernel_backend)
 
     # -- memory management (§3.2): the custom allocator --------------------------
     def _register(self, ba: BlockArray) -> BlockArray:
@@ -305,6 +308,12 @@ class TaskRuntime:
         if isinstance(self._exec, StagedExecutor):
             s.waves = self._exec.waves_run
             s.grouped_dispatches = self._exec.grouped_dispatches
+        # wave-kernel backend counters, duck-typed so any executor that
+        # routes groups through the pallas layer (staged/sharded real,
+        # sim predicted) reports the same fields; inert under "xla"
+        if getattr(self._exec, "kernel_backend", "xla") == "pallas":
+            s.kernel_dispatches = self._exec.kernel_dispatches
+            s.kernel_fallbacks = self._exec.kernel_fallbacks
         # residency semantics are shared by all five executors: the
         # measured movement comes from the memory layer's recorder (zero
         # under executors that never place tiles on devices)

@@ -78,8 +78,10 @@ class ShardedExecutor(StagedExecutor):
     kind = "sharded"
 
     def __init__(self, graph, scheduler, group: bool = True,
-                 n_homes: int = 4, owner_skew_threshold: float = 0.0):
-        super().__init__(graph, scheduler, group=group)
+                 n_homes: int = 4, owner_skew_threshold: float = 0.0,
+                 kernel_backend: str = "xla"):
+        super().__init__(graph, scheduler, group=group,
+                         kernel_backend=kernel_backend)
         self.n_homes = n_homes
         self.owner_skew_threshold = owner_skew_threshold
         self._smap: dict = {}           # (fn, mesh, n_ins) -> jitted hybrid
@@ -168,7 +170,15 @@ class ShardedExecutor(StagedExecutor):
         ctx = self._mesh_ctx()
         if ctx is None:
             # single-device fallback: identical to the staged executor
+            # (including its pallas wave-kernel attempt when
+            # kernel_backend="pallas" — how the CPU matrix exercises it)
             return super()._run_group(group)
+        if self.kernel_backend == "pallas":
+            # under a live mesh the group dispatches through the
+            # shard_map/vmap hybrid; a fused pallas grid would pin the
+            # whole wave to one device and undo owner-computes, so the
+            # mesh path is a named fallback, not a lowering attempt
+            self._note_kernel_fallback(group, "sharded_mesh")
         mesh = ctx.mesh
         devmap = device_assignment(self.n_homes, ctx)
         ndev = int(np.asarray(mesh.devices).size)

@@ -48,6 +48,14 @@ class SimTask:
     # per-home managers walk their slices in parallel, so the spawn charge
     # is the *max* per-manager walk, not the sum — this carries the split.
     home_blocks: tuple[int, ...] | None = None
+    # kernel_backend="pallas": this task runs inside a fused wave kernel.
+    # ``onchip_bytes`` is the slice of ``mem_bytes`` the fused grid keeps
+    # in on-chip memory (the write-back footprint staged MPB-style between
+    # grid steps): the DES charges it at MPB line cost instead of
+    # contended DRAM, and skips the per-task whole-L2 flush — one wave,
+    # one kernel, one flush (amortized to ~0 per task, §3.2).
+    fused: bool = False
+    onchip_bytes: float = 0.0
 
     # simulation state (reset per run)
     deps_remaining: int = 0
@@ -175,7 +183,8 @@ class SimExecutor(ExecutorBase):
     def __init__(self, graph, scheduler, *, n_workers: int = 4,
                  mpb_slots: int = 16, cost_fn=None,
                  params: SCCParams | None = None,
-                 dep_managers: int | None = None):
+                 dep_managers: int | None = None,
+                 kernel_backend: str = "xla"):
         self.graph = graph
         self.scheduler = scheduler
         self.n_workers = n_workers
@@ -186,6 +195,14 @@ class SimExecutor(ExecutorBase):
         # message traffic + parallel per-home walks instead of one
         # master-side walk (None = the central §3.3 cost)
         self.dep_managers = dep_managers
+        # RuntimeConfig.kernel_backend="pallas": predict which waves the
+        # wave-kernel layer would fuse (same grouping + eligibility the
+        # staged executor uses) and charge their write-back traffic at
+        # on-chip rather than DRAM cost.  Counters mirror the real
+        # executors' RuntimeStats fields, here as predictions.
+        self.kernel_backend = kernel_backend
+        self.kernel_dispatches = 0
+        self.kernel_fallbacks = 0
         self.pending = []
         self.last_result: SimResult | None = None
         # fragments compose sequentially (each sync point serializes the
@@ -209,7 +226,43 @@ class SimExecutor(ExecutorBase):
         elems = sum(int(np.prod(m.region.shape)) for m in td.args)
         return 2.0 * elems, float(total_bytes)
 
-    def _to_sim(self, td, batch_tids: set[int]) -> SimTask:
+    def _predict_fused(self) -> set[int]:
+        """Replay the staged executor's wavefront layering + grouping over
+        the pending batch and ask the wave-kernel eligibility which groups
+        would fuse — the DES never executes bodies, so fusion here is a
+        schedule-level prediction using the *same* shared contract
+        (``wavekernel.group_signature`` / ``wavekernel.eligibility``) the
+        real dispatch uses, and can therefore not drift from it."""
+        from collections import defaultdict
+
+        from . import wavekernel
+
+        fused: set[int] = set()
+        indeg = {td: td.deps_remaining for td in self.pending}
+        frontier = [td for td in self.pending if indeg[td] == 0]
+        while frontier:
+            frontier.sort(key=lambda t: t.spawn_order)
+            groups = defaultdict(list)
+            for td in frontier:
+                groups[wavekernel.group_signature(td)].append(td)
+            for g in groups.values():
+                if wavekernel.eligibility(g) is None:
+                    self.kernel_dispatches += 1
+                    fused.update(t.tid for t in g)
+                else:
+                    self.kernel_fallbacks += 1
+            nxt = []
+            for td in frontier:
+                for dep in td.dependents:
+                    if dep in indeg:
+                        indeg[dep] -= 1
+                        if indeg[dep] == 0:
+                            nxt.append(dep)
+            frontier = nxt
+        return fused
+
+    def _to_sim(self, td, batch_tids: set[int],
+                fused_tids: set[int] = frozenset()) -> SimTask:
         flops, mem = self.cost_fn(td)
         owner = 0
         for m in td.args:
@@ -229,6 +282,11 @@ class SimExecutor(ExecutorBase):
                 if m.READS and h != owner:
                     self.predicted_tile_moves += 1
         homes = tuple(sorted(per_home)) or (0,)
+        fused = td.tid in fused_tids
+        # the fused grid stages the write-back footprint on-chip: outputs
+        # stream between grid steps instead of flushing to DRAM per task
+        onchip = (float(sum(m.region.nbytes for m in td.args if m.WRITES))
+                  if fused else 0.0)
         return SimTask(
             tid=td.tid, flops=float(flops), mem_bytes=float(mem),
             homes=homes,
@@ -236,7 +294,8 @@ class SimExecutor(ExecutorBase):
             n_blocks=max(n_blocks, 1),
             home_bytes=tuple(per_home.get(h, 0.0) for h in homes) or None,
             home_blocks=tuple(per_home_blocks.get(h, 0)
-                              for h in homes) or None)
+                              for h in homes) or None,
+            fused=fused, onchip_bytes=min(onchip, float(mem)))
 
     def on_spawn(self, td, ready: bool) -> None:
         self.pending.append(td)
@@ -245,7 +304,10 @@ class SimExecutor(ExecutorBase):
         if not self.pending:
             return
         batch_tids = {td.tid for td in self.pending}
-        sim_tasks = [self._to_sim(td, batch_tids) for td in self.pending]
+        fused_tids = (self._predict_fused()
+                      if self.kernel_backend == "pallas" else frozenset())
+        sim_tasks = [self._to_sim(td, batch_tids, fused_tids)
+                     for td in self.pending]
         self.last_result = simulate(sim_tasks, self.n_workers, self.params,
                                     mpb_slots=self.mpb_slots,
                                     dep_managers=self.dep_managers)
@@ -341,16 +403,29 @@ def simulate(tasks: list[SimTask], n_workers: int,
     def exec_time(w: WorkerState, task: SimTask) -> tuple[float, float]:
         comp = p.compute_time_s(task.flops)
         shares = mc_shares(task)
-        mem0 = sum(p.mem_time_s(sh, w.mc_hops[mc], concurrent=1)
+        # fused wave kernels (kernel_backend="pallas") keep the task's
+        # write-back slice on-chip: only the remaining DRAM fraction
+        # contends at the controllers; the on-chip slice moves at MPB
+        # line cost (local, hop-free, contention-free — §3.2)
+        dram = 1.0
+        onchip_s = 0.0
+        if task.fused and task.mem_bytes > 0 and task.onchip_bytes > 0:
+            dram = (task.mem_bytes - task.onchip_bytes) / task.mem_bytes
+            onchip_s = (task.onchip_bytes / p.cacheline_bytes) \
+                * p.mpb_write_s(0)
+        mem0 = sum(p.mem_time_s(sh * dram, w.mc_hops[mc], concurrent=1)
                    for sh, mc in zip(shares, task.homes))
-        f = mem0 / max(mem0 + comp, 1e-12)
+        f = mem0 / max(mem0 + comp + onchip_s, 1e-12)
         mem_frac[task.tid] = f
         mem = 0.0
         for sh, mc in zip(shares, task.homes):
             conc = 1.0 + max(mc_active[mc], 0.0)   # others + me
-            mem += p.mem_time_s(sh, w.mc_hops[mc], concurrent=conc)
-        fl = p.seconds(p.flush_cycles + p.invalidate_cycles)
-        return comp + mem, fl
+            mem += p.mem_time_s(sh * dram, w.mc_hops[mc], concurrent=conc)
+        # one fused kernel flushes once per wave, not once per task: the
+        # per-task whole-L2 flush/invalidate charge disappears
+        fl = (0.0 if task.fused
+              else p.seconds(p.flush_cycles + p.invalidate_cycles))
+        return comp + mem + onchip_s, fl
 
     def begin(widx: int, task: SimTask, t0: float):
         """Worker starts executing: contention is sampled NOW (queued

@@ -1,0 +1,218 @@
+"""Pallas wave kernels: one fused ``pl.pallas_call`` per grouped wave.
+
+The paper's §3.2 performance argument is that a wave's tasks should run
+out of fast on-chip memory (the per-core MPBs) instead of round-tripping
+every operand through shared DRAM.  The staged executor already fuses a
+wavefront's identical tile tasks into one ``jit(vmap(fn))`` dispatch; this
+module goes one level down: an eligible group lowers into a *single*
+Pallas kernel whose grid axis is the task axis — ``grid=(n_tasks,)`` —
+and whose ``BlockSpec``s map each task's block footprint onto the stacked
+tile storage.  Grid step ``t`` sees exactly task ``t``'s operand tiles in
+kernel-local memory (the modern analogue of staging through the MPB), the
+task body runs unchanged on the per-task views, and outputs are written
+back through the output ``BlockSpec``s — tile loads/stores happen in
+on-chip memory instead of one HBM round trip per vmap lane.
+
+Selection is ``RuntimeConfig.kernel_backend``: ``"xla"`` (the default) is
+today's vmap/shard_map dispatch, ``"pallas"`` tries this lowering per
+group and *automatically falls back* to the XLA path for ineligible
+groups — :func:`eligibility` names the reason (single-task group,
+non-rectangular footprint, mixed dtypes, grid overflow, ...), the
+executor counts it in ``RuntimeStats.kernel_fallbacks`` and emits a
+``kernel_dispatch`` event carrying backend + reason.  The staged path
+thus stays the always-available reference oracle, and the differential
+fuzz harness (``tests/test_differential.py``) holds the two bit-identical.
+
+Bit-exactness contract: the built kernel is always wrapped in ``jax.jit``.
+Under jit, the Pallas-interpreted task body and the ``jit(vmap(fn))``
+reference compile to the same XLA ops per task, so results are bitwise
+equal to the staged path (pinned by the fuzz harness); *eager* execution
+is excluded precisely because CPU eager dot products differ from
+compiled ones in the last ulp.
+
+On hardware without a Pallas backend (the CPU test matrix), the kernel
+runs under ``pl.pallas_call(..., interpret=True)`` — forced by the
+``REPRO_PALLAS_INTERPRET=1`` env flag in CI and auto-enabled whenever the
+default jax backend is not TPU (:func:`interpret_mode`).
+"""
+from __future__ import annotations
+
+import os
+from typing import Callable, Sequence
+
+import jax
+import numpy as np
+
+from .graph import TaskDescriptor, normalize_outputs
+
+__all__ = ["MAX_GRID_TASKS", "WaveKernelError", "group_signature",
+           "eligibility", "interpret_mode", "infer_out_structs",
+           "build_wave_kernel"]
+
+# One pallas grid dimension per fused wave: groups larger than this take
+# the XLA fallback ("grid_overflow").  The real bound is the compiler's
+# grid-dimension limit (2^16 programs on current TPU lowerings); tests
+# monkeypatch this down to exercise the overflow path cheaply.
+MAX_GRID_TASKS = 65536
+
+
+class WaveKernelError(RuntimeError):
+    """A group passed eligibility but failed to lower/trace; the caller
+    treats it as the ``"lowering_failed"`` fallback, never a user error."""
+
+
+def group_signature(td: TaskDescriptor) -> tuple:
+    """The wave-grouping key: function identity plus the *structure* of
+    the footprint and the firstprivate values (shapes/dtypes, never the
+    values themselves) — tasks that differ only in region contents or
+    index values share one batched dispatch.
+
+    Lives here (not on the executor) because it is the contract shared by
+    three consumers that must never drift: the staged executor's group
+    builder, this module's eligibility check (which assumes a group is
+    structurally homogeneous and so inspects only ``group[0]``), and the
+    DES's fused-wave predictor (``sim.py``)."""
+    parts: list = [td.fn]
+    for m in td.args:
+        parts.append((type(m).__name__, m.region.shape,
+                      str(m.region.array.dtype)))
+    for v in td.values:
+        # structure only, no device transfer on the dispatch critical
+        # path; the canonical dtype (what jnp.asarray will stage the
+        # value to) is the key, so a Python float and an np.float32
+        # from different spawn sites still share one dispatch
+        dt = jax.dtypes.canonicalize_dtype(np.result_type(v))
+        parts.append(("firstprivate", np.shape(v), str(dt)))
+    return tuple(parts)
+
+
+def eligibility(group: Sequence[TaskDescriptor]) -> str | None:
+    """Can this group lower into one fused pallas grid?  ``None`` means
+    eligible; otherwise the named fallback reason recorded in
+    ``RuntimeStats.kernel_fallbacks`` and the ``kernel_dispatch`` event.
+
+    Groups come pre-homogenized by :func:`group_signature`, so structure
+    checks read ``group[0]`` only.  Reasons:
+
+    * ``"single_task"``    — a 1-task group; a fused grid buys nothing
+      over the plain jitted call and TPU grids dislike degenerate dims.
+    * ``"grid_overflow"``  — more tasks than :data:`MAX_GRID_TASKS`.
+    * ``"non_rectangular"``— a footprint region that is not a rank-2
+      rectangle of tiles; the BlockSpec tiling implemented here covers
+      the paper's gemm/jacobi bodies (2-D static block footprints).
+    * ``"mixed_dtype"``    — operand/output regions disagree on dtype;
+      one fused kernel would need per-operand memory spaces the TPU
+      lowering does not give us.
+    * ``"nonscalar_firstprivate"`` — an index parameter that is not a
+      scalar; scalars ride the grid as ``(n,)`` operands, arrays would
+      need their own footprint analysis.
+    """
+    if len(group) == 1:
+        return "single_task"
+    if len(group) > MAX_GRID_TASKS:
+        return "grid_overflow"
+    td = group[0]
+    dtypes = set()
+    for m in td.args:
+        spec = m.region.footprint_spec()
+        if spec.rank != 2:
+            return "non_rectangular"
+        dtypes.add(spec.dtype)
+    if len(dtypes) > 1:
+        return "mixed_dtype"
+    for v in td.values:
+        if np.shape(v) != ():
+            return "nonscalar_firstprivate"
+    return None
+
+
+def interpret_mode() -> bool:
+    """Run the kernel under the Pallas interpreter?  Forced on by
+    ``REPRO_PALLAS_INTERPRET=1`` (the CI CPU matrix), auto-enabled off
+    TPU where no Pallas lowering exists.  Interpreted kernels execute
+    the same traced ops the compiled kernel would, so the bit-exactness
+    contract holds either way."""
+    if os.environ.get("REPRO_PALLAS_INTERPRET", "") == "1":
+        return True
+    return jax.default_backend() != "tpu"
+
+
+def infer_out_structs(fn: Callable, in_structs: Sequence[jax.ShapeDtypeStruct],
+                      n_out: int, label: str) -> list[jax.ShapeDtypeStruct]:
+    """Abstractly trace one task's body on its per-task operand structure
+    to learn the output shapes/dtypes the fused kernel must declare.
+    Tracing the *body* (not the region metadata) means a body whose
+    result dtype differs from its output region's dtype still lowers to
+    exactly what the vmap path computes — the region store converts on
+    commit, identically on both paths."""
+    try:
+        out = jax.eval_shape(fn, *in_structs)
+    except Exception as e:             # untraceable body -> XLA fallback
+        raise WaveKernelError(f"eval_shape failed for {label}: {e}") from e
+    outs = normalize_outputs(out, n_out, label)
+    structs = []
+    for o in outs:
+        if not hasattr(o, "shape") or not hasattr(o, "dtype"):
+            raise WaveKernelError(f"{label}: non-array output {type(o)}")
+        structs.append(jax.ShapeDtypeStruct(tuple(o.shape), o.dtype))
+    return structs
+
+
+def _task_spec(elt_shape: tuple, pl):
+    """The BlockSpec mapping grid step ``t`` onto task ``t``'s slice of a
+    stacked operand: block ``(1, *elt_shape)`` at block index ``(t, 0, 0)``
+    — each grid step sees exactly its own task's tiles in kernel-local
+    memory.  Scalars (firstprivate indices) stack to ``(n,)`` and block
+    as ``(1,)`` at index ``(t,)``."""
+    if elt_shape == ():
+        return pl.BlockSpec((1,), lambda t: (t,))
+    zeros = (0,) * len(elt_shape)
+    return pl.BlockSpec((1, *elt_shape), lambda t, _z=zeros: (t, *_z))
+
+
+def build_wave_kernel(fn: Callable, n_tasks: int,
+                      in_structs: Sequence[jax.ShapeDtypeStruct],
+                      out_structs: Sequence[jax.ShapeDtypeStruct],
+                      *, interpret: bool, label: str = "") -> Callable:
+    """Lower one eligible group into a jitted fused dispatch.
+
+    Returns ``call(*stacked_ins) -> tuple(stacked_outs)`` where every
+    stacked operand/result has the task axis first (the staged stacking
+    order: READS args then firstprivate values).  Inside the kernel, grid
+    step ``t`` drops the unit task axis (``ref[0]``), runs the unchanged
+    task body on its per-task tile views, and writes each output back
+    through its own BlockSpec — one ``pallas_call`` replaces ``n_tasks``
+    logical dispatches."""
+    from jax.experimental import pallas as pl
+
+    n_in = len(in_structs)
+    n_out = len(out_structs)
+
+    def kernel(*refs):
+        ins = [r[0] for r in refs[:n_in]]
+        res = normalize_outputs(fn(*ins), n_out, label)
+        for o, v in zip(refs[n_in:], res):
+            o[0] = v
+
+    try:
+        call = pl.pallas_call(
+            kernel,
+            grid=(n_tasks,),
+            in_specs=[_task_spec(tuple(s.shape), pl) for s in in_structs],
+            out_specs=[_task_spec(tuple(s.shape), pl) for s in out_structs],
+            out_shape=[jax.ShapeDtypeStruct((n_tasks, *s.shape), s.dtype)
+                       for s in out_structs],
+            interpret=interpret,
+        )
+    except Exception as e:
+        raise WaveKernelError(f"pallas lowering failed for {label}: {e}") \
+            from e
+    jitted = jax.jit(call)
+
+    def run(*stacked):
+        outs = jitted(*stacked)
+        # match the task-fn return convention the group store normalizes
+        # (a bare array for one output, a tuple for several)
+        return outs[0] if n_out == 1 else tuple(outs)
+
+    return run

@@ -26,7 +26,13 @@ Kinds:
   ``bytes_moved``/``bytes_staged`` sum exactly to ``RuntimeStats``).
 * ``dispatch``       — one batched (or single) dispatch: function name,
   task count, dispatch mode (``jit``/``vmap``/``shard_map``/
-  ``vmap_device``) and its wall time.
+  ``vmap_device``/``pallas``) and its wall time.
+* ``kernel_dispatch``— the wave-kernel backend decided how one group
+  dispatches (emitted only under ``kernel_backend="pallas"``):
+  ``backend`` is ``"pallas"`` (fused grid) or ``"xla"`` (fallback), and
+  ``reason`` names why a fallback was taken (``"single_task"``,
+  ``"non_rectangular"``, ``"mixed_dtype"``, ``"grid_overflow"``, ...;
+  empty on the pallas path).
 * ``queue_depth``    — a per-device (or per-worker) queue depth changed;
   the tracker keeps the live map, which the sharded executor feeds back
   into ``placement.rebalance_owners``.
@@ -63,6 +69,8 @@ EVENT_FIELDS: dict[str, frozenset] = {
                              "bytes_staged"}),
     "dispatch": frozenset({"wave", "executor", "fn", "tasks", "mode",
                            "wall_s"}),
+    "kernel_dispatch": frozenset({"wave", "executor", "fn", "tasks",
+                                  "backend", "reason"}),
     "queue_depth": frozenset({"channel", "depth"}),
     "owner_override": frozenset({"wave", "spilled"}),
     "tile_cache": frozenset({"worker", "hits", "misses"}),

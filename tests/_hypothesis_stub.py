@@ -73,13 +73,27 @@ def given(**strategy_kw):
 
 
 def install() -> None:
-    """Register this stub as ``hypothesis`` + ``hypothesis.strategies``."""
+    """Register this stub as ``hypothesis`` + ``hypothesis.strategies``.
+
+    Refuses to install when the *real* hypothesis is importable: the stub
+    exists only for hermetic containers, and silently shadowing the real
+    package would downgrade the property tests' example generation on CI
+    without anyone noticing (``conftest.py`` asserts this never happens).
+    Stub modules carry ``IS_REPRO_STUB = True`` so any test can tell which
+    implementation is active."""
+    import importlib.util
+    if importlib.util.find_spec("hypothesis") is not None:
+        raise RuntimeError(
+            "refusing to install the hypothesis stub: the real hypothesis "
+            "package is importable and must take precedence")
     mod = types.ModuleType("hypothesis")
     mod.given = given
     mod.settings = settings
+    mod.IS_REPRO_STUB = True
     st = types.ModuleType("hypothesis.strategies")
     for name in ("integers", "floats", "tuples", "lists", "sampled_from"):
         setattr(st, name, globals()[name])
+    st.IS_REPRO_STUB = True
     mod.strategies = st
     sys.modules["hypothesis"] = mod
     sys.modules["hypothesis.strategies"] = st

@@ -1,11 +1,23 @@
+import importlib.util
 import os
 import sys
 
 sys.path.insert(0, os.path.dirname(__file__))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-try:
-    import hypothesis  # noqa: F401
-except ImportError:                      # hermetic container: use the stub
+# hypothesis: the real package whenever it is installed (CI installs it),
+# the deterministic stub only in hermetic containers.  Decide from
+# find_spec, not try/except import — an already-registered stub module in
+# sys.modules would make a bare import succeed and silently shadow a real
+# installation.
+HYPOTHESIS_IS_STUB = importlib.util.find_spec("hypothesis") is None
+if HYPOTHESIS_IS_STUB:
     import _hypothesis_stub
     _hypothesis_stub.install()
+
+import hypothesis  # noqa: E402
+
+assert getattr(hypothesis, "IS_REPRO_STUB", False) == HYPOTHESIS_IS_STUB, (
+    "the hypothesis stub is shadowing the real hypothesis package "
+    f"(stub active: {getattr(hypothesis, 'IS_REPRO_STUB', False)}, "
+    f"real package installed: {not HYPOTHESIS_IS_STUB})")

@@ -1,0 +1,254 @@
+"""Seeded random task-graph generator for differential executor testing.
+
+One seed -> one deterministic task program: a plain-data step list
+(:func:`generate`) replayed onto a fresh runtime by :func:`run_case`.
+Programs mix everything the dependence analyzer and the dispatch layers
+must agree on:
+
+* ``in``/``out``/``inout`` footprints, single-tile and multi-tile,
+* overlapping regions (a window task reads a 2x2 tile neighbourhood that
+  other tasks write tile-by-tile),
+* firstprivate index parameters (scalar offsets into a halo, scale
+  factors) so grouped dispatch carries by-value operands,
+* a second dtype (an int32 array) so some waves are mixed-dtype — under
+  ``kernel_backend="pallas"`` those must take the XLA fallback and still
+  match bit-for-bit,
+* uneven waves: chains, fan-in and independent tasks of one seed layer
+  into wavefronts of varying width with 1-task groups in the mix.
+
+``tests/test_differential.py`` replays every pinned seed on sequential vs
+staged vs sharded vs staged+pallas and asserts bit-identical outputs and
+identical dependence counts.  The task functions are module-level on
+purpose: all four paths (and all seeds) share one jit/vmap/pallas cache
+per function, which is also what makes a 50-seed sweep affordable.
+
+Failures replay exactly: ``python -m tests.fuzz_graphs <seed>`` prints the
+generated program and runs the four-way comparison for one seed.
+"""
+from __future__ import annotations
+
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import RuntimeConfig, TaskRuntime, task
+
+TILE = 8
+GRID = 3                       # float32 arrays are GRIDxGRID tiles
+SEEDS = tuple(range(60))       # pinned: >= 50 seeds, replayed verbatim
+
+__all__ = ["SEEDS", "TILE", "GRID", "generate", "run_case"]
+
+
+# -- the op vocabulary (module-level: one jit cache across all runs).
+# Each task body routes through an inner jitted kernel so the sequential
+# executor — which runs bodies eagerly — executes the *compiled*
+# computation: XLA's CPU backend contracts `x + alpha*y` into an FMA
+# under jit but not op-by-op, and the bit-identity contract across all
+# four paths only holds when every path runs the compiled form (inner
+# jit inlines transparently under the vmap/pallas traces).
+@jax.jit
+def _axpy_k(c, a, alpha):
+    return c + alpha * a
+
+
+@task(inout="c", in_="a", firstprivate="alpha")
+def _axpy(c, a, alpha):
+    return _axpy_k(c, a, alpha)
+
+
+@jax.jit
+def _scaled_copy_k(src, s):
+    return s * src
+
+
+@task(in_="src", out="dst", firstprivate="s")
+def _scaled_copy(src, s, dst=None):
+    return _scaled_copy_k(src, s)
+
+
+@jax.jit
+def _gemm_k(c, x, y):
+    return c + jnp.dot(x, y, preferred_element_type=jnp.float32)
+
+
+@task(inout="c", in_=("x", "y"))
+def _gemm(c, x, y):
+    return _gemm_k(c, x, y)
+
+
+@jax.jit
+def _window_k(src, r0, c0):
+    return jax.lax.dynamic_slice(src, (r0, c0), (TILE, TILE)) * 0.5
+
+
+@task(in_="src", out="dst", firstprivate=("r0", "c0"))
+def _window(src, r0, c0, dst=None):
+    return _window_k(src, r0, c0)
+
+
+@jax.jit
+def _blend_k(c, a, b):
+    return 0.25 * c + 0.5 * a + 0.25 * b
+
+
+@task(inout="c", in_=("a", "b"))
+def _blend(c, a, b):
+    return _blend_k(c, a, b)
+
+
+@jax.jit
+def _accum_int_k(c, m):
+    return c + 0.125 * m.astype(jnp.float32)
+
+
+@task(inout="c", in_="m")
+def _accum_int(c, m):
+    # mixed-dtype group: float32 tile accumulating an int32 tile — under
+    # kernel_backend="pallas" this wave must take the XLA fallback
+    return _accum_int_k(c, m)
+
+
+_OPS = ("axpy", "scaled_copy", "gemm", "window", "blend", "accum_int")
+_WEIGHTS = (4, 3, 3, 3, 3, 2)
+
+
+def generate(seed: int) -> list[tuple]:
+    """The seed's program: a list of plain-data steps, each
+    ``(op, *tile indices / values)`` — no runtime objects, so a failing
+    seed replays exactly from this description alone."""
+    rng = random.Random(seed)
+    steps: list[tuple] = []
+    for _ in range(rng.randint(8, 18)):
+        op = rng.choices(_OPS, weights=_WEIGHTS)[0]
+        t = lambda: rng.randrange(GRID)
+        if op == "axpy":
+            steps.append((op, t(), t(), t(), t(),
+                          round(rng.uniform(-2, 2), 3)))
+        elif op == "scaled_copy":
+            # 1x2 tile source/dest strips: multi-tile footprints that
+            # overlap single-tile writers
+            j = rng.randrange(GRID - 1)
+            steps.append((op, t(), j, t(), rng.randrange(GRID - 1),
+                          round(rng.uniform(0.5, 1.5), 3)))
+        elif op == "gemm":
+            steps.append((op, t(), t(), t(), t(), t(), t()))
+        elif op == "window":
+            # 2x2 halo read + firstprivate offset into it
+            i, j = rng.randrange(GRID - 1), rng.randrange(GRID - 1)
+            steps.append((op, i, j, rng.randrange(TILE),
+                          rng.randrange(TILE), t(), t()))
+        elif op == "blend":
+            steps.append((op, t(), t(), t(), t(), t(), t()))
+        else:                          # accum_int
+            steps.append((op, t(), t(), t(), t()))
+    return steps
+
+
+def _spawn(steps: list[tuple], arrs: dict) -> None:
+    A, B, C, M = arrs["A"], arrs["B"], arrs["C"], arrs["M"]
+    for step in steps:
+        op, rest = step[0], step[1:]
+        if op == "axpy":
+            ci, cj, ai, aj, alpha = rest
+            _axpy(C[ci, cj], A[ai, aj], alpha)
+        elif op == "scaled_copy":
+            si, sj, di, dj, s = rest
+            _scaled_copy(A[si, sj:sj + 2], s, B[di, dj:dj + 2])
+        elif op == "gemm":
+            ci, cj, xi, xj, yi, yj = rest
+            _gemm(C[ci, cj], A[xi, xj], B[yi, yj])
+        elif op == "window":
+            si, sj, r0, c0, di, dj = rest
+            _window(B[si:si + 2, sj:sj + 2], r0, c0, C[di, dj])
+        elif op == "blend":
+            ci, cj, ai, aj, bi, bj = rest
+            _blend(C[ci, cj], A[ai, aj], B[bi, bj])
+        else:                          # accum_int
+            ci, cj, mi, mj = rest
+            _accum_int(C[ci, cj], M[mi, mj])
+
+
+def run_case(seed: int, **config_overrides):
+    """Replay one seed's program on a fresh runtime.
+
+    Returns ``(outputs, stats)``: the gathered arrays as numpy (compared
+    bit-for-bit across executors) and the run's ``RuntimeStats`` (the
+    dependence counts must not depend on the executor either)."""
+    steps = generate(seed)
+    rng = np.random.default_rng(seed)
+    n = TILE * GRID
+    cfg = RuntimeConfig(**{"executor": "staged", **config_overrides})
+    rt = TaskRuntime(cfg)
+    try:
+        with rt.scope():
+            arrs = {
+                name: rt.from_array(
+                    rng.standard_normal((n, n)).astype(np.float32),
+                    (TILE, TILE), name=name)
+                for name in ("A", "B", "C")
+            }
+            arrs["M"] = rt.from_array(
+                rng.integers(-4, 5, size=(n, n)).astype(np.int32),
+                (TILE, TILE), name="M")
+            _spawn(steps, arrs)
+            rt.barrier()
+            outputs = {name: np.asarray(ba.gather())
+                       for name, ba in arrs.items()}
+        return outputs, rt.stats()
+    finally:
+        rt.shutdown()
+
+
+_PATHS = {
+    "sequential": {"executor": "sequential"},
+    "staged": {"executor": "staged"},
+    "sharded": {"executor": "sharded"},
+    "staged+pallas": {"executor": "staged", "kernel_backend": "pallas"},
+}
+
+
+def compare_paths(seed: int) -> dict:
+    """Run one seed on all four paths and assert equivalence; returns the
+    per-path stats for further inspection."""
+    ref_out, ref_stats = run_case(seed, **_PATHS["sequential"])
+    stats = {"sequential": ref_stats}
+    # dependence counts must agree among the *deferred* executors, which
+    # all analyze the same pending graph; the sequential oracle runs each
+    # task at spawn, so its analyzer sees only completed predecessors —
+    # it anchors numerics, the staged path anchors the dependence counts
+    dep_ref = None
+    for path, cfg in _PATHS.items():
+        if path == "sequential":
+            continue
+        out, st = run_case(seed, **cfg)
+        stats[path] = st
+        for name, want in ref_out.items():
+            got = out[name]
+            assert got.dtype == want.dtype, \
+                f"seed {seed} {path} {name}: dtype {got.dtype}!={want.dtype}"
+            assert np.array_equal(got, want), (
+                f"seed {seed} {path} {name}: outputs differ "
+                f"(max |d|={np.abs(got.astype(np.float64) - want.astype(np.float64)).max()})")
+        assert st.tasks_spawned == ref_stats.tasks_spawned, \
+            f"seed {seed} {path}: tasks_spawned differ"
+        counts = (st.tasks_spawned, st.deps_found, st.blocks_walked)
+        if dep_ref is None:
+            dep_ref = counts
+        else:
+            assert counts == dep_ref, (
+                f"seed {seed} {path}: dependence counts {counts} != "
+                f"{dep_ref} (staged reference)")
+    return stats
+
+
+if __name__ == "__main__":
+    import sys
+
+    for s in [int(a) for a in sys.argv[1:]] or SEEDS:
+        for step in generate(s):
+            print(s, step)
+        compare_paths(s)
+        print(f"seed {s}: all paths agree")

@@ -73,6 +73,68 @@ class TestSchema:
         assert problems and any(expect in p for p in problems), problems
 
 
+class TestKernelBackendBlock:
+    """The kernel-backend sweep entries: info-only wall clocks, gated
+    deterministic dispatch/fallback counts."""
+
+    def _doc_with_sweep(self):
+        doc = _minimal_doc()
+        doc["entries"].append({
+            "id": "kernel_backend/matmul", "kind": "kernel_backend",
+            "info": {"wall_s_xla": 0.4, "wall_s_pallas": 0.6},
+            "metrics": {"kernel_dispatches": 4, "kernel_fallbacks": 0,
+                        "waves": 4, "grouped_dispatches": 4}})
+        return doc
+
+    def test_valid_sweep_block_passes(self, gate):
+        doc = self._doc_with_sweep()
+        assert gate.validate_kernel_backend(doc) == []
+        assert gate.validate_schema(doc) == []
+
+    def test_doc_without_sweep_entries_is_valid(self, gate):
+        assert gate.validate_kernel_backend(_minimal_doc()) == []
+
+    @pytest.mark.parametrize("mutate, expect", [
+        (lambda e: e["metrics"].pop("kernel_dispatches"),
+         "kernel_dispatches"),
+        (lambda e: e["metrics"].update(kernel_fallbacks=-1),
+         "kernel_fallbacks"),
+        (lambda e: e["metrics"].update(kernel_dispatches=3.5),
+         "kernel_dispatches"),
+        (lambda e: e["metrics"].update(kernel_fallbacks=True),
+         "kernel_fallbacks"),
+        (lambda e: e["info"].pop("wall_s_pallas"), "wall_s_pallas"),
+        (lambda e: e["info"].update(wall_s_xla=float("inf")),
+         "wall_s_xla"),
+        (lambda e: e["info"].update(wall_s_xla=-0.1), "wall_s_xla"),
+    ])
+    def test_broken_sweep_blocks_are_flagged(self, gate, mutate, expect):
+        doc = self._doc_with_sweep()
+        mutate(doc["entries"][-1])
+        problems = gate.validate_kernel_backend(doc)
+        assert problems and any(expect in p for p in problems), problems
+
+    def test_fallback_count_drift_is_two_sided(self, gate):
+        """A fallback appearing where the baseline fused (or vice versa)
+        trips the determinism gate in either direction — eligibility
+        regressions can't hide as 'fewer dispatches, still passes'."""
+        assert gate._rule("kernel_fallbacks") == "two_sided"
+        assert gate._rule("kernel_dispatches") == "two_sided"
+        doc = self._doc_with_sweep()
+        new = copy.deepcopy(doc)
+        new["entries"][-1]["metrics"]["kernel_fallbacks"] = 2
+        new["entries"][-1]["metrics"]["kernel_dispatches"] = 2
+        problems = gate.compare(doc, new)
+        assert {p["metric"] for p in problems} == {
+            "kernel_dispatches", "kernel_fallbacks"}
+
+    def test_wall_clock_drift_is_never_gated(self, gate):
+        doc = self._doc_with_sweep()
+        new = copy.deepcopy(doc)
+        new["entries"][-1]["info"]["wall_s_pallas"] = 60.0
+        assert gate.compare(doc, new) == []
+
+
 class TestDirectionRules:
     def test_rules(self, gate):
         assert gate._rule("speedup_w43") == "lower_is_worse"

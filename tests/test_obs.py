@@ -71,8 +71,11 @@ class TestEventSchema:
         # update EVENT_SCHEMA and this pin together
         assert set(EVENT_FIELDS) == {
             "trace_header", "wave_open", "wave_close", "dispatch",
-            "queue_depth", "owner_override", "tile_cache", "sim_predict",
-            "dep_msg", "manager_admit", "stats"}
+            "kernel_dispatch", "queue_depth", "owner_override",
+            "tile_cache", "sim_predict", "dep_msg", "manager_admit",
+            "stats"}
+        assert EVENT_FIELDS["kernel_dispatch"] == {
+            "wave", "executor", "fn", "tasks", "backend", "reason"}
         assert EVENT_FIELDS["dep_msg"] == {"manager", "msg", "count"}
         assert EVENT_FIELDS["manager_admit"] == {
             "manager", "task", "deps", "depth"}

@@ -75,6 +75,41 @@ def validate_timings(doc) -> list[str]:
     return bad
 
 
+def validate_kernel_backend(doc) -> list[str]:
+    """Shape-check the kernel-backend sweep entries (empty = valid).
+
+    Wall clocks ride in each entry's ``info`` block and are purely
+    informational (CPU CI runs pallas in interpret mode — a correctness
+    harness, not a perf claim); the gated quantities are the
+    deterministic ``kernel_dispatches``/``kernel_fallbacks`` counts,
+    which must be present non-negative integers so the two-sided
+    determinism diff has something real to bite on.  An artifact with no
+    ``kernel_backend`` entries is valid (older emitters).
+    """
+    bad: list[str] = []
+    entries = doc.get("entries")
+    if not isinstance(entries, list):
+        return bad
+    for e in entries:
+        if not isinstance(e, dict) or e.get("kind") != "kernel_backend":
+            continue
+        eid = e.get("id", "<kernel_backend>")
+        metrics = e.get("metrics") or {}
+        for key in ("kernel_dispatches", "kernel_fallbacks"):
+            v = metrics.get(key)
+            if isinstance(v, bool) or not isinstance(v, int) or v < 0:
+                bad.append(f"{eid}: metric {key!r} is not a "
+                           f"non-negative integer ({v!r})")
+        info = e.get("info") or {}
+        for key in ("wall_s_xla", "wall_s_pallas"):
+            v = info.get(key)
+            if isinstance(v, bool) or not isinstance(v, (int, float)) \
+                    or not math.isfinite(v) or v < 0:
+                bad.append(f"{eid}: info {key!r} is not a finite "
+                           f"non-negative number ({v!r})")
+    return bad
+
+
 def timings_point(doc) -> dict | None:
     """One series point for the nightly append-only timing log: the
     timings block plus enough identity (suite, env) to plot it."""
@@ -212,7 +247,8 @@ def main(argv=None) -> int:
 
     with open(args.artifact, encoding="utf-8") as f:
         doc = json.load(f)
-    bad = validate_schema(doc) + validate_timings(doc)
+    bad = (validate_schema(doc) + validate_timings(doc)
+           + validate_kernel_backend(doc))
     if bad:
         for b in bad:
             print(f"SCHEMA: {b}")
