@@ -17,7 +17,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import TaskRuntime, task
+from repro import TaskRuntime, task
 from repro.kernels.black_scholes import ops as bs_ops
 from repro.kernels.cholesky import ops as chol_ops
 from repro.kernels.jacobi import ref as jac_ref
@@ -271,7 +271,7 @@ def run_app(name: str, executor: str = "staged", *,
     ``app_kwargs`` forwards problem sizes to the app (the benchmark
     suites shrink them for smoke runs).
     """
-    from repro.core import RuntimeConfig
+    from repro import RuntimeConfig
 
     if verify is None:
         verify = executor != "sim"

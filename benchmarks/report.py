@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import json
 
-from repro.core import RuntimeStats
+from repro import RuntimeStats
 
 from .roofline import build_table, load_all, model_params
 

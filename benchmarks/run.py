@@ -78,7 +78,7 @@ def runtime_overheads(report) -> dict:
     """Master-side costs of the real (host) runtime: spawn + dependence
     analysis latency — the quantity the paper's master-bottleneck finding
     hinges on."""
-    from repro.core import TaskRuntime, task
+    from repro import TaskRuntime, task
 
     @task(inout="x")
     def tick(x):
@@ -317,6 +317,17 @@ def build_bench(suite: str, *, skip_roofline: bool = True,
         if isinstance(v, float):
             report("spawn_throughput", k, round(v, 2))
 
+    # 5. streaming serving: deterministic admission counters (gated) +
+    # the open-loop latency sweep (info-only wall clocks)
+    from .serving import entry as serving_entry
+    serving = serving_entry(suite)
+    for k in ("submitted", "admitted", "rejected"):
+        report("serving", k, int(serving["metrics"][k]))
+    for rate, r in serving["info"]["rates"].items():
+        report("serving", f"p99_ms_at_{rate}rps", round(r["p99_ms"], 2))
+        report("serving", f"throughput_at_{rate}rps",
+               round(r["throughput_rps"], 1))
+
     entries: list[dict] = [{
         "id": "microbench",
         "kind": "microbench",
@@ -359,6 +370,7 @@ def build_bench(suite: str, *, skip_roofline: bool = True,
             "blocks_walked_per_task": over["blocks_walked_per_task"]},
     })
     entries.append(spawn)
+    entries.append(serving)
 
     roofline_note = "skipped (--skip-roofline)"
     if not skip_roofline:
@@ -407,6 +419,14 @@ def build_bench(suite: str, *, skip_roofline: bool = True,
             e["metrics"]["kernel_fallbacks"] == 0
             and e["metrics"]["kernel_dispatches"] > 0
             for e in kb),
+        # serving admission is a closed ledger — every submitted request
+        # resolved exactly one way, and the controller provably kept the
+        # in-flight footprint inside the byte budget
+        "serving_admission_consistent":
+            serving["metrics"]["admitted"] + serving["metrics"]["rejected"]
+            == serving["metrics"]["submitted"]
+            and serving["metrics"]["peak_in_flight_bytes"]
+            <= serving["metrics"]["budget_bytes"],
     }
     if cfg["paper_ranges"]:
         checks.update({

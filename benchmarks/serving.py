@@ -1,0 +1,196 @@
+"""Streaming-serving benchmark: admission control + request latency.
+
+Two phases over the same workload — a decode-style lookup against a
+shared KV ``BlockArray`` (each request reads one context tile and writes
+one output row through ``repro.serve.Session``):
+
+* **Admission phase** (gated): burst-submits requests against a budget
+  sized for exactly ``capacity`` in-flight requests with the ``reject``
+  saturation policy on the staged executor.  Nothing completes between
+  submits, so the admit/reject split per burst is a pure function of the
+  byte budget — ``submitted``, ``admitted``, ``rejected`` and
+  ``peak_in_flight_bytes`` are deterministic counters that
+  ``tools/bench_gate.py`` diffs against the committed baseline
+  (``validate_serving`` additionally pins ``admitted + rejected ==
+  submitted`` and ``peak <= budget`` on every artifact).
+
+* **Latency phase** (info-only): an open-loop arrival sweep on the host
+  executor — requests arrive on a fixed schedule regardless of
+  completion, ``Session.poll()`` retires them between arrivals, and the
+  per-rate p50/p99 latency and delivered throughput land in the entry's
+  ``info`` block.  Wall clocks are machine-speed dependent and never
+  gated, matching how the harness treats every other timing.
+
+CLI::
+
+    PYTHONPATH=src python -m benchmarks.serving --suite smoke
+    PYTHONPATH=src python -m benchmarks.serving --rates 100 400 1600
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import RuntimeConfig, task
+from repro.serve import ServeConfig, Session
+
+D = 64          # feature dimension of the KV rows
+CTX_TILE = 16   # context rows per KV tile (the unit one request reads)
+
+# per-suite shapes: smoke keeps the whole thing inside a CI job; paper
+# streams the 10^3-request admission phase the acceptance bar names
+PROFILES: dict = {
+    "smoke": {"requests": 96, "burst": 8, "capacity": 4,
+              "lat_requests": 48, "rates": (200, 800)},
+    "paper": {"requests": 1000, "burst": 10, "capacity": 4,
+              "lat_requests": 256, "rates": (100, 400, 1600)},
+}
+
+
+@task(in_="kv", out="dest", firstprivate=("q",))
+def _attend(kv, q, dest=None):
+    # one decode step against one context tile: softmax(q.kv^T).kv
+    w = jax.nn.softmax(q @ kv.T / np.sqrt(D).astype(np.float32))
+    return (w @ kv)[None, :]
+
+
+def _arrays(session: Session, n_tiles: int, n_slots: int):
+    rng = np.random.default_rng(7)
+    kv = session.from_array(
+        rng.standard_normal((n_tiles * CTX_TILE, D)).astype(np.float32),
+        (CTX_TILE, D), name="kv")
+    out = session.zeros((n_slots, D), (1, D), name="out", state=False)
+    return kv, out
+
+
+def _submit(session: Session, kv, out, i: int, slot: int, q):
+    n_tiles = kv.grid[0]
+    src, dst = kv[i % n_tiles, 0], out[slot, 0]
+    return session.submit(lambda: _attend(src, q, dst), src, dst)
+
+
+def request_bytes(capacity: int = 1) -> int:
+    """Bytes one request holds in flight (KV tile + output row), times
+    ``capacity`` — the byte budget that admits exactly that many."""
+    return capacity * (CTX_TILE * D * 4 + D * 4)
+
+
+def run_admission(n_requests: int, burst: int, capacity: int) -> dict:
+    """Burst-submit ``n_requests`` against a ``capacity``-request budget
+    with load shedding; returns the deterministic admission counters."""
+    budget = request_bytes(capacity)
+    with Session(RuntimeConfig(executor="staged"),
+                 ServeConfig(budget_bytes=budget,
+                             on_saturation="reject")) as s:
+        kv, out = _arrays(s, n_tiles=8, n_slots=burst)
+        q = np.ones(D, dtype=np.float32)
+        t0 = time.perf_counter()
+        i = 0
+        while i < n_requests:
+            handles = [_submit(s, kv, out, i + j, j, q)
+                       for j in range(min(burst, n_requests - i))]
+            i += len(handles)
+            s.drain()               # retire the admitted burst
+        wall = time.perf_counter() - t0
+        st = s.stats()
+    return {
+        "submitted": st.admission_submitted,
+        "admitted": st.admission_admitted,
+        "rejected": st.admission_rejected,
+        "peak_in_flight_bytes": st.admission_peak_bytes,
+        "budget_bytes": budget,
+        "wall_s": wall,
+    }
+
+
+def run_open_loop(n_requests: int, rate_rps: float, capacity: int = 8,
+                  n_workers: int = 4) -> dict:
+    """Open-loop arrival sweep: requests arrive every ``1/rate`` seconds
+    whether or not earlier ones finished; the host executor's workers
+    retire them concurrently via ``poll()``.  Queuing (never shedding),
+    so every request completes and the latency sample is complete."""
+    dt = 1.0 / rate_rps
+    with Session(RuntimeConfig(executor="host", n_workers=n_workers),
+                 ServeConfig(budget_bytes=request_bytes(capacity))) as s:
+        kv, out = _arrays(s, n_tiles=8, n_slots=capacity)
+        q = np.ones(D, dtype=np.float32)
+        # warm the dispatch path so compilation stays out of the tail
+        _submit(s, kv, out, 0, 0, q).wait()
+        handles = []
+        t0 = time.perf_counter()
+        for i in range(n_requests):
+            handles.append(_submit(s, kv, out, i, i % capacity, q))
+            deadline = t0 + (i + 1) * dt
+            while time.perf_counter() < deadline:
+                s.poll()
+        s.drain()
+        wall = time.perf_counter() - t0
+    lat_ms = np.asarray([h.latency_s for h in handles]) * 1e3
+    return {
+        "rate_rps": rate_rps,
+        "p50_ms": float(np.percentile(lat_ms, 50)),
+        "p99_ms": float(np.percentile(lat_ms, 99)),
+        "throughput_rps": len(handles) / wall,
+    }
+
+
+def entry(suite: str = "smoke") -> dict:
+    """One ``bddt-scc-bench/1`` entry: the deterministic admission
+    counters as gated metrics, the open-loop latency sweep as info."""
+    cfg = PROFILES[suite]
+    adm = run_admission(cfg["requests"], cfg["burst"], cfg["capacity"])
+    rates = {}
+    for r in cfg["rates"]:
+        res = run_open_loop(cfg["lat_requests"], r)
+        rates[str(r)] = {k: res[k] for k in
+                         ("p50_ms", "p99_ms", "throughput_rps")}
+    return {
+        "id": f"serving-{suite}",
+        "kind": "serving",
+        "metrics": {
+            "submitted": float(adm["submitted"]),
+            "admitted": float(adm["admitted"]),
+            "rejected": float(adm["rejected"]),
+            "peak_in_flight_bytes": float(adm["peak_in_flight_bytes"]),
+            "budget_bytes": float(adm["budget_bytes"]),
+        },
+        "info": {
+            "suite": suite,
+            "capacity": cfg["capacity"],
+            "burst": cfg["burst"],
+            "request_bytes": request_bytes(),
+            "admission_wall_s": adm["wall_s"],
+            "lat_requests": cfg["lat_requests"],
+            "rates": rates,
+        },
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--suite", choices=sorted(PROFILES), default="smoke",
+                    help="problem-size profile")
+    ap.add_argument("--rates", type=float, nargs="+", default=None,
+                    help="open-loop arrival rates (req/s) to sweep")
+    args = ap.parse_args(argv)
+    cfg = PROFILES[args.suite]
+    adm = run_admission(cfg["requests"], cfg["burst"], cfg["capacity"])
+    print(f"admission: {adm['submitted']} submitted, "
+          f"{adm['admitted']} admitted, {adm['rejected']} rejected, "
+          f"peak {adm['peak_in_flight_bytes']}B / "
+          f"budget {adm['budget_bytes']}B "
+          f"({adm['wall_s']:.2f}s)")
+    for r in (args.rates or cfg["rates"]):
+        res = run_open_loop(cfg["lat_requests"], r)
+        print(f"rate {r:>7.0f}/s: p50 {res['p50_ms']:7.2f}ms  "
+              f"p99 {res['p99_ms']:7.2f}ms  "
+              f"delivered {res['throughput_rps']:.0f}/s")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

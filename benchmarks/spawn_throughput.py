@@ -39,7 +39,7 @@ import argparse
 import time
 from collections import deque
 
-from repro.core.blocks import BlockArray, In, InOut
+from repro import BlockArray, In, InOut
 from repro.core.depman import ShardedDependenceManager
 from repro.core.deps import DependenceAnalyzer
 from repro.core.graph import DescriptorPool, TaskGraph

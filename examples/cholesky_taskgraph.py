@@ -14,7 +14,7 @@ trailing submatrix drains.
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import TaskRuntime, task
+from repro import TaskRuntime, task
 from repro.kernels.cholesky import ops as chol
 
 

@@ -27,7 +27,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro import dist
-from repro.core import RuntimeConfig, TaskRuntime, task
+from repro import RuntimeConfig, TaskRuntime, task
 
 
 @task(inout="c", in_=("a", "b"))

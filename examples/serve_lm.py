@@ -1,52 +1,147 @@
-"""Batched serving driver: prefill a batch of prompts, then decode with
-the pre-allocated KV arena (the decode_32k dry-run shape, miniaturized).
+"""Streaming LM serving on ``repro.serve``: decode requests against a
+shared KV arena.
 
-    PYTHONPATH=src python examples/serve_lm.py --arch mistral-nemo-12b
+The serving shape of the paper's runtime: the KV cache lives as
+long-lived ``BlockArray`` state striped along the sequence axis (the
+"memory controllers"), and every arriving query becomes a *small task
+graph* — one ``flash_decode`` partial-attention task per KV tile in the
+request's context window, plus one log-sum-exp combine task.  The
+dependence analyzer isolates requests touching different windows, the
+admission controller bounds the in-flight footprint bytes, and the
+arena checkpoints per home through ``repro.ckpt`` so a restart resumes
+bit-identically.
+
+(The batch prefill+generate driver this file used to hold lives on as
+``repro.launch.serve.generate``.)
+
+    PYTHONPATH=src python examples/serve_lm.py
+    PYTHONPATH=src python examples/serve_lm.py --requests 48 --budget 4
 """
 import argparse
+import tempfile
 import time
 
-import jax
-import jax.numpy as jnp
+import numpy as np
 
-from repro.configs import get_config
-from repro.launch.serve import generate
-from repro.models import api
+from repro import RuntimeConfig, task
+from repro.kernels.flash_decode import ops as fd_ops, ref as fd_ref
+from repro.serve import ServeConfig, Session, footprint_nbytes
+
+S_TILE = 64         # KV rows per tile (one sequence shard = one task)
+D = 64              # head dimension
+N_TILES = 16        # arena length = N_TILES * S_TILE tokens
+SHARDS = 4          # context window per request, in tiles
+
+
+@task(in_=("k", "v"), out=("o", "lse"), firstprivate=("q",))
+def _partial(k, v, q, o=None, lse=None):
+    # one KV shard's partial attention for one query token
+    out, l = fd_ops.decode_partial(q[None, None, :], k[None, None],
+                                   v[None, None])
+    return out[0], l[0][:, None]                # (1, D), (1, 1)
+
+
+@task(in_=("outs", "lses"), out="dest")
+def _combine(outs, lses, dest=None):
+    # exact LSE merge of the shard partials -> the request's output row
+    o = fd_ref.combine_partials(outs[:, None, None, :], lses[:, :, None])
+    return o[0].astype(np.float32)              # (1, D)
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="mistral-nemo-12b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=48)
-    ap.add_argument("--new-tokens", type=int, default=24)
-    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--budget", type=int, default=3,
+                    help="admission budget, in concurrent requests")
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="checkpoint directory (default: a temp dir)")
     args = ap.parse_args()
+    n_req = args.requests
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="serve_lm_ckpt_")
+    rng = np.random.default_rng(0)
+    k_init = rng.standard_normal((N_TILES * S_TILE, D)).astype(np.float32)
+    v_init = rng.standard_normal((N_TILES * S_TILE, D)).astype(np.float32)
+    queries = rng.standard_normal((n_req, D)).astype(np.float32)
+    windows = rng.integers(0, N_TILES - SHARDS + 1, n_req)
 
-    cfg = get_config(args.arch).reduced()
-    params = api.init_params(jax.random.PRNGKey(0), cfg)
-    ks = jax.random.split(jax.random.PRNGKey(1), 3)
-    batch = {"tokens": jax.random.randint(
-        ks[0], (args.batch, args.prompt_len), 0, cfg.vocab_size)}
-    if cfg.vision_seq:
-        batch["vision_embeds"] = 0.02 * jax.random.normal(
-            ks[1], (args.batch, cfg.vision_seq, cfg.d_model),
-            jnp.dtype(cfg.compute_dtype))
-    if cfg.family == "audio":
-        batch["enc_frames"] = 0.02 * jax.random.normal(
-            ks[2], (args.batch, cfg.encoder_seq, cfg.d_model),
-            jnp.dtype(cfg.compute_dtype))
+    # request footprint: SHARDS (K + V) tiles + SHARDS partial rows +
+    # SHARDS lse rows + 1 output row; the budget admits args.budget such
+    # requests concurrently and queues the rest (FIFO)
+    req_bytes = (2 * SHARDS * S_TILE * D + SHARDS * (D + 1) + D) * 4
+    serve = ServeConfig(budget_bytes=args.budget * req_bytes,
+                        checkpoint_dir=ckpt_dir)
 
-    t0 = time.perf_counter()
-    out = generate(cfg, params, batch, max_new_tokens=args.new_tokens,
-                   max_len=args.prompt_len + args.new_tokens + 8,
-                   temperature=args.temperature)
-    dt = time.perf_counter() - t0
-    print(f"[serve] {cfg.name}: generated {out.shape[0]}x{out.shape[1]} "
-          f"tokens in {dt:.2f}s ({out.size / dt:.1f} tok/s incl. compile)")
-    print(out[:, :12])
-    assert out.shape == (args.batch, args.new_tokens)
-    assert int(out.max()) < cfg.vocab_size
+    with Session(RuntimeConfig(executor="host", n_workers=args.workers),
+                 serve) as s:
+        K = s.from_array(k_init, (S_TILE, D), name="K")
+        V = s.from_array(v_init, (S_TILE, D), name="V")
+        OP = s.zeros((n_req * SHARDS, D), (1, D), name="op", state=False)
+        LSE = s.zeros((n_req * SHARDS, 1), (1, 1), name="lse", state=False)
+        OUT = s.zeros((n_req, D), (1, D), name="out", state=False)
+
+        def build(i):
+            t0, q = int(windows[i]), queries[i]
+            r0 = i * SHARDS
+
+            def graph():
+                futs = [_partial(K[t0 + j, 0], V[t0 + j, 0], q,
+                                 OP[r0 + j, 0], LSE[r0 + j, 0])
+                        for j in range(SHARDS)]
+                futs.append(_combine(OP[r0:r0 + SHARDS, 0],
+                                     LSE[r0:r0 + SHARDS, 0], OUT[i, 0]))
+                return futs
+
+            footprint = ([K[t0:t0 + SHARDS, 0], V[t0:t0 + SHARDS, 0],
+                          OP[r0:r0 + SHARDS, 0], LSE[r0:r0 + SHARDS, 0],
+                          OUT[i, 0]])
+            assert footprint_nbytes(footprint) == req_bytes
+            return s.submit(graph, *footprint, name=f"decode-{i}")
+
+        t_start = time.perf_counter()
+        handles = [build(i) for i in range(n_req)]
+        while not all(h.done() for h in handles):
+            s.poll()
+            time.sleep(0.0005)
+        wall = time.perf_counter() - t_start
+
+        # verify every served row against the unsharded oracle
+        for i, h in enumerate(handles):
+            t0 = int(windows[i])
+            kw = k_init[t0 * S_TILE:(t0 + SHARDS) * S_TILE]
+            vw = v_init[t0 * S_TILE:(t0 + SHARDS) * S_TILE]
+            want = fd_ref.decode_mha(queries[i][None, None, :],
+                                     kw[None, None], vw[None, None])[0]
+            got = np.asarray(OUT.get_tile((i, 0)))
+            np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+        lat = np.asarray([h.latency_s for h in handles]) * 1e3
+        st = s.stats()
+        epoch = s.checkpoint(sync=True)
+        print(f"[serve_lm] {n_req} requests in {wall * 1e3:.0f}ms "
+              f"({n_req / wall:.0f} req/s): "
+              f"p50 {np.percentile(lat, 50):.1f}ms "
+              f"p99 {np.percentile(lat, 99):.1f}ms")
+        print(f"[serve_lm] admission: {st.admission_admitted} admitted / "
+              f"{st.admission_submitted} submitted, peak "
+              f"{st.admission_peak_bytes}B <= "
+              f"budget {st.admission_budget_bytes}B")
+        print(f"[serve_lm] checkpointed arena epoch {epoch} -> {ckpt_dir}")
+        assert st.admission_peak_bytes <= st.admission_budget_bytes
+
+    # simulated restart: a fresh runtime restores the arena bit-identically
+    with Session(RuntimeConfig(executor="host", n_workers=args.workers),
+                 ServeConfig(checkpoint_dir=ckpt_dir)) as s2:
+        K2 = s2.zeros((N_TILES * S_TILE, D), (S_TILE, D), name="K")
+        V2 = s2.zeros((N_TILES * S_TILE, D), (S_TILE, D), name="V")
+        restored = s2.restore_latest()
+        for idx in K2.home:
+            np.testing.assert_array_equal(np.asarray(K2.get_tile(idx)),
+                                          np.asarray(K.get_tile(idx)))
+            np.testing.assert_array_equal(np.asarray(V2.get_tile(idx)),
+                                          np.asarray(V.get_tile(idx)))
+        print(f"[serve_lm] restart restored epoch {restored}: "
+              f"KV arena bit-identical")
 
 
 if __name__ == "__main__":

@@ -1,4 +1,7 @@
-"""Checkpointing: save/restore with manifest + elastic resharding."""
-from .checkpoint import save_checkpoint, restore_checkpoint, latest_step
+"""Checkpointing: save/restore with manifest + elastic resharding, plus
+epoch-tagged per-home BlockArray tile checkpoints for the serving layer."""
+from .checkpoint import (latest_epoch, latest_step, restore_checkpoint,
+                         restore_tiles, save_checkpoint, save_tiles)
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "save_tiles", "restore_tiles", "latest_epoch"]

@@ -17,13 +17,29 @@ non cache-coherent hardware — implemented as:
 * :mod:`sim`        — discrete-event simulation of the SCC runtime (Figs 5-7)
 * :mod:`pipeline`   — pipeline-parallel schedules derived by dependence analysis
 """
-from .api import (RuntimeConfig, RuntimeStats, TaskFuture, current_runtime,
-                  task)
-from .blocks import BlockArray, In, InOut, Out, Region
+from .api import (DEP_MANAGERS, EXECUTORS, KERNEL_BACKENDS, PLACEMENTS,
+                  SCHEDULING_POLICIES, STATS_SCHEMA, DepManagerKind,
+                  ExecutorKind, KernelBackend, PlacementKind, RuntimeConfig,
+                  RuntimeStats, SchedulingPolicy, TaskFuture,
+                  current_runtime, task, wait_on)
+from .blocks import (AccessMode, BlockArray, In, InOut, Out, Region,
+                     coerce_mode)
 from .depman import ShardedDependenceManager
 from .executor import Executor
 from .runtime import TaskRuntime
 
-__all__ = ["TaskRuntime", "BlockArray", "In", "Out", "InOut", "Region",
-           "task", "TaskFuture", "RuntimeConfig", "RuntimeStats",
-           "Executor", "ShardedDependenceManager", "current_runtime"]
+__all__ = [
+    # entry points
+    "TaskRuntime", "task", "wait_on", "current_runtime",
+    # data + footprints
+    "BlockArray", "Region", "AccessMode", "In", "Out", "InOut",
+    "coerce_mode",
+    # configuration + results
+    "RuntimeConfig", "RuntimeStats", "STATS_SCHEMA", "TaskFuture",
+    # typed configuration choices (one source for every stringly field)
+    "ExecutorKind", "DepManagerKind", "SchedulingPolicy", "PlacementKind",
+    "KernelBackend", "EXECUTORS", "DEP_MANAGERS", "SCHEDULING_POLICIES",
+    "PLACEMENTS", "KERNEL_BACKENDS",
+    # extension surfaces
+    "Executor", "ShardedDependenceManager",
+]

@@ -53,6 +53,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import enum
 import inspect
 import threading
 from dataclasses import dataclass
@@ -61,11 +62,16 @@ from typing import Callable
 import jax
 import numpy as np
 
-from .blocks import AccessMode, BlockArray, In, InOut, Out, Region
+from .blocks import (AccessMode, BlockArray, In, InOut, MODE_CLASSES, Out,
+                     Region, coerce_mode)
 from .graph import TaskDescriptor
 
 __all__ = ["task", "TaskFn", "TaskFuture", "RuntimeConfig", "RuntimeStats",
-           "STATS_SCHEMA", "current_runtime"]
+           "STATS_SCHEMA", "current_runtime", "wait_on",
+           "ExecutorKind", "DepManagerKind", "SchedulingPolicy",
+           "PlacementKind", "KernelBackend",
+           "EXECUTORS", "DEP_MANAGERS", "SCHEDULING_POLICIES",
+           "PLACEMENTS", "KERNEL_BACKENDS"]
 
 
 # ---------------------------------------------------------------------------
@@ -122,14 +128,103 @@ def suspend_runtime_scope():
             stack[:] = saved
 
 
+def wait_on(*regions, mode="in"):
+    """Region-scoped taskwait on the ambient runtime (§3.3 sync).
+
+    The module-level spelling of ``rt.wait_on`` for code inside a
+    ``with rt:`` scope: blocks until every task whose footprint
+    conflicts with ``regions`` under ``mode`` has completed.  ``mode``
+    accepts ``"in"``/``"out"``/``"inout"`` or an ``AccessMode`` member
+    (``AccessMode.IN`` waits for writers only; ``OUT``/``INOUT`` wait
+    for readers too).
+    """
+    rt = current_runtime()
+    if rt is None:
+        raise RuntimeError(
+            "wait_on: no active runtime scope — call it inside "
+            "`with rt:` (or use rt.wait_on(...) on a runtime directly)")
+    return rt.wait_on(*regions, mode=mode)
+
+
 # ---------------------------------------------------------------------------
-# configuration
-_EXECUTORS = ("sequential", "host", "staged", "sim", "sharded")
+# configuration choices — every stringly-typed ``RuntimeConfig`` field is
+# backed by exactly one enum here; ``validate()``, the executor factory,
+# the registries (``scheduler.POLICIES``, ``placement.PLACEMENTS``) and
+# the docs all read the same lists, so they cannot drift.  Members are
+# ``str`` subclasses: ``ExecutorKind.HOST == "host"``, hashes like the
+# plain string, and formats as the bare value — plain strings keep
+# working everywhere an enum is accepted.
+class _ChoiceEnum(str, enum.Enum):
+    def __str__(self) -> str:
+        return self.value
+
+
+class ExecutorKind(_ChoiceEnum):
+    """``RuntimeConfig.executor`` — which execution engine runs tasks."""
+    SEQUENTIAL = "sequential"
+    HOST = "host"
+    STAGED = "staged"
+    SIM = "sim"
+    SHARDED = "sharded"
+
+
+class DepManagerKind(_ChoiceEnum):
+    """``RuntimeConfig.dep_manager`` — central analyzer vs per-home
+    sharded managers (bit-identical schedules)."""
+    CENTRAL = "central"
+    SHARDED = "sharded"
+
+
+class SchedulingPolicy(_ChoiceEnum):
+    """``RuntimeConfig.policy`` — running-mode ready-queue policy (§3.4)."""
+    ROUND_ROBIN = "round_robin"
+    LOCALITY = "locality"
+    RANDOM = "random"
+
+
+class PlacementKind(_ChoiceEnum):
+    """``RuntimeConfig.placement`` — block → memory-controller map."""
+    SINGLE = "single"
+    STRIPED = "striped"
+    STRIPED_DIAG = "striped_diag"
+    STRIPED_ROWS = "striped_rows"
+
+
+class KernelBackend(_ChoiceEnum):
+    """``RuntimeConfig.kernel_backend`` — grouped-wave dispatch path."""
+    XLA = "xla"
+    PALLAS = "pallas"
+
+
+EXECUTORS = tuple(m.value for m in ExecutorKind)
+DEP_MANAGERS = tuple(m.value for m in DepManagerKind)
+SCHEDULING_POLICIES = tuple(m.value for m in SchedulingPolicy)
+PLACEMENTS = tuple(m.value for m in PlacementKind)
+KERNEL_BACKENDS = tuple(m.value for m in KernelBackend)
+
+_EXECUTORS = EXECUTORS        # pre-redesign private alias
+
+
+def _check_choice(field: str, value, choices: tuple[str, ...]) -> str:
+    """Validate one choice field; enum members normalize to their value."""
+    if isinstance(value, _ChoiceEnum):
+        value = value.value
+    if value not in choices:
+        raise ValueError(f"{field} must be one of {choices}, "
+                         f"got {value!r}")
+    return value
 
 
 @dataclass(frozen=True)
 class RuntimeConfig:
     """Everything that shapes a :class:`~repro.core.TaskRuntime`.
+
+    Every choice field accepts the plain string or the matching typed
+    member — :class:`ExecutorKind`, :class:`DepManagerKind`,
+    :class:`SchedulingPolicy`, :class:`PlacementKind`,
+    :class:`KernelBackend` — and ``validate()`` normalizes members to
+    their string values, so the two spellings configure identical
+    runtimes.  The valid values below are the enum members, verbatim.
 
     * ``executor``    — "sequential" (serial-elision oracle), "host" (the
       paper's dynamic master/worker protocol), "staged" (wavefront
@@ -192,17 +287,17 @@ class RuntimeConfig:
       ``RuntimeStats.worker_cache_hits/misses`` and as ``tile_cache``
       tracker events.
     """
-    executor: str = "host"
+    executor: str | ExecutorKind = "host"
     n_workers: int = 4
     mpb_slots: int = 16
     pool_capacity: int = 4096
-    dep_manager: str = "central"
-    policy: str = "round_robin"
-    placement: str = "striped"
+    dep_manager: str | DepManagerKind = "central"
+    policy: str | SchedulingPolicy = "round_robin"
+    placement: str | PlacementKind = "striped"
     n_controllers: int = 4
     owner_skew_threshold: float = 0.0
     group_waves: bool = True
-    kernel_backend: str = "xla"
+    kernel_backend: str | KernelBackend = "xla"
     seed: int = 0
     sim_cost_fn: Callable | None = None
     sim_params: object | None = None
@@ -210,36 +305,42 @@ class RuntimeConfig:
     profile_waves: bool = False
     worker_cache_tiles: int = 64
 
+    #: choice field → (enum type, canonical values); the single source
+    #: the validator, the snapshot test, and the docs table all read
+    CHOICES = {
+        "executor": (ExecutorKind, EXECUTORS),
+        "dep_manager": (DepManagerKind, DEP_MANAGERS),
+        "policy": (SchedulingPolicy, SCHEDULING_POLICIES),
+        "placement": (PlacementKind, PLACEMENTS),
+        "kernel_backend": (KernelBackend, KERNEL_BACKENDS),
+    }
+
     def validate(self) -> "RuntimeConfig":
-        from .scheduler import POLICIES
-        if self.executor not in _EXECUTORS:
-            raise ValueError(f"executor must be one of {_EXECUTORS}, "
-                             f"got {self.executor!r}")
-        if self.policy not in POLICIES:
-            raise ValueError(f"policy must be one of {tuple(POLICIES)}, "
-                             f"got {self.policy!r}")
-        if self.dep_manager not in ("central", "sharded"):
-            raise ValueError(f"dep_manager must be 'central' or 'sharded', "
-                             f"got {self.dep_manager!r}")
-        if self.kernel_backend not in ("xla", "pallas"):
-            raise ValueError(f"kernel_backend must be 'xla' or 'pallas', "
-                             f"got {self.kernel_backend!r}")
+        """Check every field and return a normalized copy: enum members
+        in choice fields come back as their plain-string values, so the
+        runtime internals only ever see canonical strings."""
+        norm = {fld: _check_choice(fld, getattr(self, fld), choices)
+                for fld, (_, choices) in self.CHOICES.items()}
+        cfg = self if all(norm[f] == getattr(self, f) and
+                          not isinstance(getattr(self, f), _ChoiceEnum)
+                          for f in norm) \
+            else dataclasses.replace(self, **norm)
         for fld in ("n_workers", "mpb_slots", "pool_capacity",
                     "n_controllers"):
-            if getattr(self, fld) < 1:
+            if getattr(cfg, fld) < 1:
                 raise ValueError(f"{fld} must be >= 1")
-        if self.owner_skew_threshold < 0:
+        if cfg.owner_skew_threshold < 0:
             raise ValueError("owner_skew_threshold must be >= 0 (0 = off)")
-        if self.worker_cache_tiles < 0:
+        if cfg.worker_cache_tiles < 0:
             raise ValueError("worker_cache_tiles must be >= 0 (0 = off)")
-        if isinstance(self.tracker, str):
+        if isinstance(cfg.tracker, str):
             from repro.obs.tracker import validate_spec
-            validate_spec(self.tracker)
-        elif self.tracker is not None and \
-                not hasattr(self.tracker, "emit"):
+            validate_spec(cfg.tracker)
+        elif cfg.tracker is not None and \
+                not hasattr(cfg.tracker, "emit"):
             raise ValueError("tracker must be a spec string, a Tracker "
                              "instance, or None")
-        return self
+        return cfg
 
     def replace(self, **overrides) -> "RuntimeConfig":
         return dataclasses.replace(self, **overrides)
@@ -310,6 +411,18 @@ class RuntimeStats:
     # (None under the central analyzer)
     dep_messages: int | None = None
     manager_admissions: list[int] | None = None
+    # serving admission controller (``repro.serve``): request counters
+    # and the in-flight footprint high-water mark against the byte
+    # budget.  All None unless a ``Session`` attached an
+    # ``AdmissionController`` to the runtime; the invariant
+    # ``submitted == admitted + rejected`` holds once the session
+    # closes (still-queued requests resolve to rejected).
+    admission_submitted: int | None = None
+    admission_admitted: int | None = None
+    admission_rejected: int | None = None
+    admission_deferred: int | None = None
+    admission_peak_bytes: int | None = None
+    admission_budget_bytes: int | None = None
     # sim executor
     predicted_total_s: float | None = None
 
@@ -629,7 +742,7 @@ class TaskFn:
 
 
 def task(fn: Callable | None = None, *, in_=(), out=(), inout=(),
-         firstprivate=()):
+         firstprivate=(), footprint=None):
     """Declare a task function's footprint (OmpSs ``#pragma omp task``).
 
     ``in_`` / ``out`` / ``inout`` each name one parameter (a string) or
@@ -637,6 +750,14 @@ def task(fn: Callable | None = None, *, in_=(), out=(), inout=(),
     exactly one list — or in ``firstprivate`` — or carry a default; at
     call sites inside a ``with rt:`` scope each footprint parameter
     receives a block :class:`Region` (or a whole :class:`BlockArray`).
+    ``footprint`` is the mapping spelling of the same declaration — a
+    dict of parameter name to access mode, where each mode is ``"in"``/
+    ``"out"``/``"inout"`` or an :class:`AccessMode` member
+    (``AccessMode.INOUT``); it merges with the list kwargs and a
+    parameter declared through both raises the usual duplicate error::
+
+        @task(footprint={"c": AccessMode.INOUT, "a": "in", "b": "in"})
+        def gemm(c, a, b): ...
     The function body receives materialized arrays for its ``in_`` and
     ``inout`` parameters (in parameter order) and returns one array per
     ``out``/``inout`` parameter (in parameter order).
@@ -653,8 +774,14 @@ def task(fn: Callable | None = None, *, in_=(), out=(), inout=(),
     ``jax.lax.dynamic_slice``, not Python slicing).
     """
     def wrap(f):
-        return TaskFn(f, in_=in_, out=out, inout=inout,
-                      firstprivate=firstprivate)
+        fin, fout, finout = (list(_names(in_)), list(_names(out)),
+                             list(_names(inout)))
+        if footprint:
+            buckets = {"in": fin, "out": fout, "inout": finout}
+            for name, mode in footprint.items():
+                buckets[coerce_mode(mode)].append(name)
+        return TaskFn(f, in_=tuple(fin), out=tuple(fout),
+                      inout=tuple(finout), firstprivate=firstprivate)
     if fn is not None:                 # bare @task is an error we explain
         raise TypeError(
             "@task needs footprint declarations, e.g. "

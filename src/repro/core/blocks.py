@@ -37,6 +37,9 @@ __all__ = [
     "Out",
     "InOut",
     "AccessMode",
+    "ACCESS_MODES",
+    "MODE_CLASSES",
+    "coerce_mode",
     "TileTraffic",
     "TileStore",
     "HostTileStore",
@@ -476,9 +479,21 @@ class Region:
 
 
 class AccessMode:
-    """OmpSs data-access attribute on a task argument (§3.1)."""
+    """OmpSs data-access attribute on a task argument (§3.1).
+
+    The three concrete modes are reachable as enum-style members —
+    ``AccessMode.IN`` / ``AccessMode.OUT`` / ``AccessMode.INOUT`` — and
+    every API that takes a mode (``wait_on``, ``tasks_touching``, the
+    ``@task(footprint=...)`` mapping form) accepts either a member or
+    its plain-string spelling via :func:`coerce_mode`.
+    """
     READS = False
     WRITES = False
+    MODE = ""          # canonical string spelling, set on subclasses
+    # enum-style member aliases, bound after the subclasses below
+    IN: "type[AccessMode]"
+    OUT: "type[AccessMode]"
+    INOUT: "type[AccessMode]"
 
     def __init__(self, region: Region):
         if not isinstance(region, Region):
@@ -492,12 +507,44 @@ class AccessMode:
 
 class In(AccessMode):
     READS = True
+    MODE = "in"
 
 
 class Out(AccessMode):
     WRITES = True
+    MODE = "out"
 
 
 class InOut(AccessMode):
     READS = True
     WRITES = True
+    MODE = "inout"
+
+
+AccessMode.IN = In
+AccessMode.OUT = Out
+AccessMode.INOUT = InOut
+
+#: canonical mode spellings, and the class each one names
+ACCESS_MODES = ("in", "out", "inout")
+MODE_CLASSES: dict[str, type[AccessMode]] = {
+    "in": In, "out": Out, "inout": InOut}
+
+
+def coerce_mode(mode) -> str:
+    """Normalize an access-mode spelling to ``"in"``/``"out"``/``"inout"``.
+
+    Accepts the plain strings, the :class:`AccessMode` members
+    (``AccessMode.IN`` — i.e. the ``In``/``Out``/``InOut`` classes), or
+    an ``AccessMode`` instance; one helper so every mode-taking API
+    raises the same ``ValueError`` listing the valid choices.
+    """
+    if isinstance(mode, type) and issubclass(mode, AccessMode):
+        mode = mode.MODE
+    elif isinstance(mode, AccessMode):
+        mode = mode.MODE
+    if mode not in MODE_CLASSES:
+        raise ValueError(
+            f"mode must be one of {ACCESS_MODES} (or AccessMode.IN/"
+            f"OUT/INOUT), got {mode!r}")
+    return mode

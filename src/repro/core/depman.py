@@ -46,6 +46,7 @@ from typing import TYPE_CHECKING, Iterable
 
 from repro.obs.tracker import NULL_TRACKER
 
+from .blocks import coerce_mode
 from .deps import BlockId
 from .mpb import MPBChannel
 
@@ -344,8 +345,7 @@ class ShardedDependenceManager:
         """Same rules as the central analyzer's region sync, routed by
         home (``mode="in"`` waits for writers; ``"out"``/``"inout"`` for
         readers too)."""
-        if mode not in ("in", "out", "inout"):
-            raise ValueError(f"mode must be in/out/inout, got {mode!r}")
+        mode = coerce_mode(mode)
         n = self.n_managers
         homes = self._homes
         per_home: dict[int, list] = {}

@@ -18,6 +18,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import TYPE_CHECKING
 
+from .blocks import coerce_mode
+
 if TYPE_CHECKING:  # pragma: no cover
     from .graph import TaskDescriptor
 
@@ -92,8 +94,7 @@ class DependenceAnalyzer:
         * ``mode="out"`` / ``"inout"`` — writers *and* readers (the caller
           intends to overwrite, so WAR orderings count too).
         """
-        if mode not in ("in", "out", "inout"):
-            raise ValueError(f"mode must be in/out/inout, got {mode!r}")
+        mode = coerce_mode(mode)
         found: set[TaskDescriptor] = set()
         for block in blocks:
             m = self._meta.get(block)

@@ -251,6 +251,13 @@ class HostExecutor(ExecutorBase):
             if not all(td.is_complete for td in tds):
                 time.sleep(0)
 
+    def pump(self) -> None:
+        """One non-blocking master step: poll worker rings, release
+        completed tasks, dispatch newly-ready ones.  Serving loops call
+        this between arrivals so completions surface without forcing a
+        dependence-cone wait."""
+        self.scheduler.polling_step()
+
     def reclaim(self) -> None:
         # §3.3: master blocks until a task completes, freeing a descriptor
         while self.scheduler.pool.free == 0:

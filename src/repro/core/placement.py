@@ -61,6 +61,13 @@ PLACEMENTS: dict[str, Callable[[BlockArray, int], None]] = {
     "striped_rows": _striped_rows,
 }
 
+# the canonical choice list lives in api.PlacementKind; this registry
+# must implement exactly that list, no more, no less
+from .api import PLACEMENTS as _PLACEMENT_NAMES  # noqa: E402
+
+assert set(PLACEMENTS) == set(_PLACEMENT_NAMES), \
+    "placement.PLACEMENTS drifted from api.PlacementKind"
+
 
 def assign_homes(ba: BlockArray, policy: str = "striped",
                  n_homes: int = 4) -> BlockArray:

@@ -48,9 +48,9 @@ import contextlib
 import time
 from typing import Callable, Sequence
 
-from .api import (RuntimeConfig, RuntimeStats, TaskFuture, _pop_runtime,
-                  _push_runtime)
-from .blocks import AccessMode, BlockArray, Region, TileTraffic
+from .api import (ExecutorKind, RuntimeConfig, RuntimeStats, TaskFuture,
+                  _pop_runtime, _push_runtime)
+from .blocks import AccessMode, BlockArray, Region, TileTraffic, coerce_mode
 from .deps import DependenceAnalyzer
 from .executor import (Executor, HostExecutor, SequentialExecutor,
                        StagedExecutor)
@@ -70,7 +70,9 @@ class TaskRuntime:
             config = RuntimeConfig(**overrides)
         elif overrides:
             config = config.replace(**overrides)
-        self.config = config.validate()
+        # validate() also normalizes typed choice members (ExecutorKind
+        # etc.) to canonical strings — internals only see those
+        self.config = config = config.validate()
         self.executor_kind = config.executor
         self.placement = config.placement
         self.n_controllers = config.n_controllers
@@ -108,6 +110,10 @@ class TaskRuntime:
         self._exec.traffic = self.traffic
         self._exec.profile = config.profile_waves
         self._arrays: list[BlockArray] = []
+        # ``repro.serve`` attaches its AdmissionController here so
+        # ``stats()`` surfaces the admission_* fields; None when the
+        # runtime is not serving
+        self.admission = None
         self._spawn_counter = 0
         self.spawn_time_s = 0.0
         self.barrier_time_s = 0.0
@@ -116,12 +122,12 @@ class TaskRuntime:
         self.futures_resolved = 0
 
     def _make_executor(self, config: RuntimeConfig) -> Executor:
-        if config.executor == "sequential":
+        if config.executor == ExecutorKind.SEQUENTIAL:
             return SequentialExecutor(self.graph, self.scheduler)
-        if config.executor == "host":
+        if config.executor == ExecutorKind.HOST:
             return HostExecutor(self.graph, self.scheduler, self.queues,
                                 cache_tiles=config.worker_cache_tiles)
-        if config.executor == "sim":
+        if config.executor == ExecutorKind.SIM:
             from .sim import SimExecutor
             return SimExecutor(self.graph, self.scheduler,
                                n_workers=config.n_workers,
@@ -132,7 +138,7 @@ class TaskRuntime:
                                              if config.dep_manager ==
                                              "sharded" else None),
                                kernel_backend=config.kernel_backend)
-        if config.executor == "sharded":
+        if config.executor == ExecutorKind.SHARDED:
             from .sharded import ShardedExecutor
             return ShardedExecutor(
                 self.graph, self.scheduler, group=config.group_waves,
@@ -211,15 +217,17 @@ class TaskRuntime:
         if kind == "future":
             self.futures_resolved += len(tds)
 
-    def wait_on(self, *regions, mode: str = "in") -> None:
+    def wait_on(self, *regions, mode="in") -> None:
         """Region-scoped taskwait (OmpSs ``taskwait on(...)``).
 
         Returns once every live task whose footprint conflicts with
         ``regions`` under ``mode`` has completed — in-flight tasks with
-        disjoint footprints are *not* waited for.  ``mode="in"`` waits for
-        pending writers (the regions' values become readable);
-        ``mode="out"``/``"inout"`` additionally waits for pending readers
-        (the regions become safely overwritable)."""
+        disjoint footprints are *not* waited for.  ``mode`` is ``"in"``/
+        ``"out"``/``"inout"`` or the matching ``AccessMode`` member:
+        ``"in"`` waits for pending writers (the regions' values become
+        readable); ``"out"``/``"inout"`` additionally waits for pending
+        readers (the regions become safely overwritable)."""
+        mode = coerce_mode(mode)
         blocks = []
         for r in regions:
             if isinstance(r, BlockArray):
@@ -332,6 +340,15 @@ class TaskRuntime:
         if getattr(self.analyzer, "dep_messages", None) is not None:
             s.dep_messages = self.analyzer.dep_messages
             s.manager_admissions = list(self.analyzer.admissions)
+        # serving admission controller (attached by repro.serve.Session)
+        if self.admission is not None:
+            a = self.admission
+            s.admission_submitted = a.submitted
+            s.admission_admitted = a.admitted
+            s.admission_rejected = a.rejected
+            s.admission_deferred = a.deferred
+            s.admission_peak_bytes = a.peak_in_flight_bytes
+            s.admission_budget_bytes = a.budget_bytes
         if getattr(self._exec, "last_result", None) is not None:
             s.predicted_total_s = self._exec.predicted_total_s
             # the DES never executes bodies: tile_moves is its *predicted*

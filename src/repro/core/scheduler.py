@@ -66,6 +66,13 @@ POLICIES: dict[str, Callable] = {
     "random": _random_policy,
 }
 
+# the canonical choice list lives in api.SchedulingPolicy; this registry
+# must implement exactly that list, no more, no less
+from .api import SCHEDULING_POLICIES  # noqa: E402  (needs POLICIES above)
+
+assert set(POLICIES) == set(SCHEDULING_POLICIES), \
+    "scheduler.POLICIES drifted from api.SchedulingPolicy"
+
 
 class MasterScheduler:
     """Drives the four task stages over a set of per-worker MPB queues."""
@@ -91,6 +98,16 @@ class MasterScheduler:
         # stats
         self.polling_rounds = 0
         self.tasks_scheduled = 0
+        # live per-worker in-flight depth, maintained unconditionally
+        # (the tracker's ``queue_depths()`` mirrors this only when a
+        # tracker is attached); the serving admission controller reads
+        # it to bound in-flight work without requiring observability on
+        self._depths = [0] * len(queues)
+
+    def queue_depths(self) -> dict[int, int]:
+        """Current in-flight tasks per worker MPB ring (dispatched,
+        not yet collected) — same shape the obs tracker reports."""
+        return {w: d for w, d in enumerate(self._depths) if d}
 
     # -- running-mode scheduling (§3.4 first half) ---------------------------
     def schedule_running(self, td: TaskDescriptor) -> None:
@@ -105,6 +122,7 @@ class MasterScheduler:
         if accepted:
             self.tasks_scheduled += 1
             self._note_placement(td, wid)
+            self._depths[wid] += 1
             if self.obs.enabled:
                 self.obs.queue(wid, +1)
         else:
@@ -133,6 +151,7 @@ class MasterScheduler:
                 if accepted:
                     self.tasks_scheduled += 1
                     self._note_placement(td, wid)
+                    self._depths[wid] += 1
                     if self.obs.enabled:
                         self.obs.queue(wid, +1)
                     return True
@@ -188,8 +207,10 @@ class MasterScheduler:
         self.graph.completion.append(td)
         # staged/sequential tds never went through an MPB ring (worker is
         # None); only host-dispatched tasks decrement a worker channel
-        if self.obs.enabled and td.worker is not None:
-            self.obs.queue(td.worker, -1)
+        if td.worker is not None:
+            self._depths[td.worker] -= 1
+            if self.obs.enabled:
+                self.obs.queue(td.worker, -1)
 
     def release_one(self) -> bool:
         """(iii) release one completed task's dependencies (lazy, §3.6)."""

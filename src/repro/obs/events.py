@@ -49,6 +49,16 @@ Kinds:
   carried, and the channel depth at send time.
 * ``stats``          — the runtime's final :class:`RuntimeStats` as its
   schema-tagged dict (``RuntimeStats.to_dict``), emitted at shutdown.
+* ``admission_admit`` / ``admission_defer`` / ``admission_reject`` /
+  ``admission_release`` — the serving admission controller
+  (``repro.serve``) decided one request's fate against the in-flight
+  byte budget: the request id, its footprint bytes, and the in-flight
+  total after the decision; rejects carry a ``reason``
+  (``"budget"``/``"oversize"``/``"closed"``), releases carry the
+  request's latency.
+* ``ckpt_save`` / ``ckpt_restore`` — one epoch-tagged tile checkpoint
+  of the serving session's shared ``BlockArray`` state committed to
+  (or was restored from) disk: epoch, array/tile counts, total bytes.
 """
 from __future__ import annotations
 
@@ -78,6 +88,15 @@ EVENT_FIELDS: dict[str, frozenset] = {
     "dep_msg": frozenset({"manager", "msg", "count"}),
     "manager_admit": frozenset({"manager", "task", "deps", "depth"}),
     "stats": frozenset({"stats"}),
+    "admission_admit": frozenset({"request", "bytes", "in_flight_bytes"}),
+    "admission_defer": frozenset({"request", "bytes", "in_flight_bytes",
+                                  "queued"}),
+    "admission_reject": frozenset({"request", "bytes", "in_flight_bytes",
+                                   "reason"}),
+    "admission_release": frozenset({"request", "bytes", "in_flight_bytes",
+                                    "latency_s"}),
+    "ckpt_save": frozenset({"epoch", "arrays", "tiles", "bytes"}),
+    "ckpt_restore": frozenset({"epoch", "arrays", "tiles", "bytes"}),
 }
 
 

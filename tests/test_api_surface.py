@@ -1,0 +1,206 @@
+"""The canonical public API surface, pinned.
+
+Three guarantees: (a) the re-export surfaces of ``repro``,
+``repro.core`` and ``repro.serve`` are exact snapshots — a name
+appearing or vanishing is a deliberate, reviewed change to this file;
+(b) the typed choice enums are the single source for every stringly
+config field, equivalent to (and normalized alongside) plain strings;
+(c) footprint access modes coerce uniformly everywhere a mode is
+accepted (``@task`` kwargs, ``wait_on``, dependence queries) with one
+shared error message.
+"""
+import numpy as np
+import pytest
+
+import repro
+import repro.core
+import repro.serve
+from repro import (AccessMode, DEP_MANAGERS, EXECUTORS, ExecutorKind,
+                   In, InOut, KERNEL_BACKENDS, KernelBackend, Out,
+                   PLACEMENTS, PlacementKind, RuntimeConfig, RuntimeStats,
+                   SCHEDULING_POLICIES, SchedulingPolicy, TaskRuntime,
+                   task, wait_on)
+from repro.core.api import DepManagerKind, _ChoiceEnum
+from repro.core.blocks import coerce_mode
+
+REPRO_ALL = [
+    "TaskRuntime", "task", "wait_on", "current_runtime",
+    "BlockArray", "Region", "AccessMode", "In", "Out", "InOut",
+    "RuntimeConfig", "RuntimeStats", "STATS_SCHEMA", "TaskFuture",
+    "ExecutorKind", "DepManagerKind", "SchedulingPolicy", "PlacementKind",
+    "KernelBackend", "EXECUTORS", "DEP_MANAGERS", "SCHEDULING_POLICIES",
+    "PLACEMENTS", "KERNEL_BACKENDS",
+    "Executor",
+    "__version__",
+]
+
+CORE_ALL = REPRO_ALL[:-1] + ["coerce_mode", "ShardedDependenceManager"]
+
+SERVE_ALL = ["Session", "ServeConfig", "RequestHandle",
+             "AdmissionController", "RequestRejected", "footprint_nbytes"]
+
+
+class TestSurfaceSnapshots:
+    def test_repro_all_is_pinned(self):
+        assert sorted(repro.__all__) == sorted(REPRO_ALL)
+
+    def test_core_all_is_pinned(self):
+        assert sorted(repro.core.__all__) == sorted(CORE_ALL)
+
+    def test_serve_all_is_pinned(self):
+        assert sorted(repro.serve.__all__) == sorted(SERVE_ALL)
+
+    @pytest.mark.parametrize("mod", [repro, repro.core, repro.serve])
+    def test_every_exported_name_resolves(self, mod):
+        for name in mod.__all__:
+            assert getattr(mod, name, None) is not None, \
+                f"{mod.__name__}.{name} is exported but missing"
+
+    def test_top_level_reexports_core_objects(self):
+        for name in REPRO_ALL:
+            if name == "__version__":
+                continue
+            assert getattr(repro, name) is getattr(repro.core, name), name
+
+
+class TestTypedChoices:
+    REGISTRY = {
+        "executor": (ExecutorKind, EXECUTORS),
+        "dep_manager": (DepManagerKind, DEP_MANAGERS),
+        "policy": (SchedulingPolicy, SCHEDULING_POLICIES),
+        "placement": (PlacementKind, PLACEMENTS),
+        "kernel_backend": (KernelBackend, KERNEL_BACKENDS),
+    }
+
+    def test_choices_cover_every_stringly_field(self):
+        assert set(RuntimeConfig.CHOICES) == set(self.REGISTRY)
+        for fld, (enum_cls, values) in self.REGISTRY.items():
+            cfg_cls, cfg_values = RuntimeConfig.CHOICES[fld]
+            assert cfg_cls is enum_cls and cfg_values == values
+
+    def test_enum_values_match_runtime_registries(self):
+        from repro.core.placement import PLACEMENTS as placement_fns
+        from repro.core.scheduler import POLICIES as policy_fns
+        assert set(SCHEDULING_POLICIES) == set(policy_fns)
+        assert set(PLACEMENTS) == set(placement_fns)
+        assert set(EXECUTORS) == {"sequential", "host", "staged", "sim",
+                                  "sharded"}
+        assert set(DEP_MANAGERS) == {"central", "sharded"}
+        assert set(KERNEL_BACKENDS) == {"xla", "pallas"}
+
+    @pytest.mark.parametrize("enum_cls, values", [
+        (ExecutorKind, EXECUTORS), (DepManagerKind, DEP_MANAGERS),
+        (SchedulingPolicy, SCHEDULING_POLICIES),
+        (PlacementKind, PLACEMENTS), (KernelBackend, KERNEL_BACKENDS),
+    ])
+    def test_members_are_their_string_values(self, enum_cls, values):
+        assert tuple(m.value for m in enum_cls) == values
+        for m in enum_cls:
+            assert isinstance(m, str) and m == m.value
+            assert str(m) == m.value              # not 'Kind.MEMBER'
+            assert isinstance(m, _ChoiceEnum)
+
+    def test_enum_and_string_configs_are_equivalent(self):
+        a = RuntimeConfig(executor=ExecutorKind.STAGED,
+                          policy=SchedulingPolicy.LOCALITY).validate()
+        b = RuntimeConfig(executor="staged", policy="locality").validate()
+        assert a.executor == b.executor == "staged"
+        assert a.policy == b.policy == "locality"
+        # validate() normalizes members to plain strings
+        assert not isinstance(a.executor, ExecutorKind)
+        assert type(a.executor) is str
+
+    def test_enum_config_runs(self):
+        with TaskRuntime(executor=ExecutorKind.SEQUENTIAL) as rt:
+            A = rt.zeros((4, 4), (2, 2))
+            assert rt.executor_kind == "sequential"
+            assert A is not None
+
+    @pytest.mark.parametrize("field, bad", [
+        ("executor", "quantum"), ("dep_manager", "none"),
+        ("policy", "lifo"), ("placement", "everywhere"),
+        ("kernel_backend", "cuda"),
+    ])
+    def test_invalid_choice_names_the_alternatives(self, field, bad):
+        with pytest.raises(ValueError) as e:
+            RuntimeConfig(**{field: bad}).validate()
+        msg = str(e.value)
+        assert field in msg and bad in msg
+        for alternative in dict(self.REGISTRY)[field][1]:
+            assert alternative in msg
+
+
+class TestModeCoercion:
+    @pytest.mark.parametrize("spec, want", [
+        ("in", "in"), ("out", "out"), ("inout", "inout"),
+        (In, "in"), (Out, "out"), (InOut, "inout"),
+        (AccessMode.IN, "in"), (AccessMode.OUT, "out"),
+        (AccessMode.INOUT, "inout"),
+    ])
+    def test_coerce_mode(self, spec, want):
+        assert coerce_mode(spec) == want
+
+    @pytest.mark.parametrize("bad", ["rw", "IN", 3, None])
+    def test_coerce_mode_rejects_with_one_message(self, bad):
+        with pytest.raises(ValueError, match="mode must be one of"):
+            coerce_mode(bad)
+
+    def test_task_footprint_kwarg_matches_classic_kwargs(self):
+        @task(in_="a", inout="b")
+        def classic(a, b):
+            return a + b
+
+        @task(footprint={"a": AccessMode.IN, "b": InOut})
+        def typed(a, b):
+            return a + b
+
+        results = []
+        for fn in (classic, typed):
+            with TaskRuntime(executor="sequential") as rt:
+                A = rt.from_array(np.ones((2, 2), np.float32), (2, 2))
+                B = rt.from_array(np.ones((2, 2), np.float32), (2, 2))
+                fn(A[0, 0], B[0, 0])
+                rt.barrier()
+                results.append(np.asarray(B.get_tile((0, 0))))
+        np.testing.assert_array_equal(results[0], results[1])
+
+    def test_task_footprint_kwarg_rejects_bad_modes(self):
+        with pytest.raises(ValueError, match="mode must be one of"):
+            @task(footprint={"x": "readwrite"})
+            def nope(x):
+                return x
+
+    def test_wait_on_accepts_typed_modes(self):
+        with TaskRuntime(executor="sequential") as rt:
+            A = rt.zeros((4, 4), (2, 2))
+            rt.wait_on(A[0, 0], mode=AccessMode.IN)
+            rt.wait_on(A[0, 0], mode=In)
+            with pytest.raises(ValueError, match="mode must be one of"):
+                rt.wait_on(A[0, 0], mode="peek")
+
+    def test_module_level_wait_on_needs_a_scope(self):
+        with pytest.raises(RuntimeError, match="scope"):
+            wait_on(None)
+
+    def test_module_level_wait_on_resolves_current_runtime(self):
+        with TaskRuntime(executor="sequential") as rt:
+            A = rt.zeros((4, 4), (2, 2))
+            with rt.scope():
+                wait_on(A[0, 0], mode="in")
+
+
+class TestStatsSurface:
+    def test_admission_fields_default_to_none(self):
+        s = RuntimeStats()
+        for f in ("admission_submitted", "admission_admitted",
+                  "admission_rejected", "admission_deferred",
+                  "admission_peak_bytes", "admission_budget_bytes"):
+            assert getattr(s, f) is None
+
+    def test_roundtrip_keeps_admission_fields(self):
+        s = RuntimeStats(admission_submitted=9, admission_admitted=6,
+                         admission_rejected=3)
+        back = RuntimeStats.from_dict(s.to_dict())
+        assert back.admission_submitted == 9
+        assert back.admission_admitted == 6
+        assert back.admission_rejected == 3

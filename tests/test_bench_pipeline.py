@@ -135,6 +135,77 @@ class TestKernelBackendBlock:
         assert gate.compare(doc, new) == []
 
 
+class TestServingBlock:
+    """The streaming-serving entry: deterministic admission counters
+    gated two-sided, open-loop latency info-only, and the ledger
+    invariants (admitted + rejected == submitted, peak <= budget)
+    enforced structurally on every artifact."""
+
+    def _doc_with_serving(self):
+        doc = _minimal_doc()
+        doc["entries"].append({
+            "id": "serving-smoke", "kind": "serving",
+            "info": {"suite": "smoke", "capacity": 4,
+                     "rates": {"200": {"p50_ms": 3.0, "p99_ms": 9.0,
+                                       "throughput_rps": 190.0}}},
+            "metrics": {"submitted": 96.0, "admitted": 48.0,
+                        "rejected": 48.0,
+                        "peak_in_flight_bytes": 17408.0,
+                        "budget_bytes": 17408.0}})
+        return doc
+
+    def test_valid_serving_block_passes(self, gate):
+        doc = self._doc_with_serving()
+        assert gate.validate_serving(doc) == []
+        assert gate.validate_schema(doc) == []
+
+    def test_doc_without_serving_entries_is_valid(self, gate):
+        assert gate.validate_serving(_minimal_doc()) == []
+
+    @pytest.mark.parametrize("mutate, expect", [
+        (lambda e: e["metrics"].pop("submitted"), "submitted"),
+        (lambda e: e["metrics"].update(admitted=-1), "admitted"),
+        (lambda e: e["metrics"].update(rejected=3.5), "rejected"),
+        (lambda e: e["metrics"].update(admitted=49.0), "ledger leaks"),
+        (lambda e: e["metrics"].update(peak_in_flight_bytes=17409.0),
+         "exceeds the budget"),
+        (lambda e: e["info"].pop("rates"), "rates"),
+        (lambda e: e["info"]["rates"]["200"].update(
+            p99_ms=float("inf")), "p99_ms"),
+        (lambda e: e["info"]["rates"]["200"].update(
+            throughput_rps=-1.0), "throughput_rps"),
+    ])
+    def test_broken_serving_blocks_are_flagged(self, gate, mutate, expect):
+        doc = self._doc_with_serving()
+        mutate(doc["entries"][-1])
+        problems = gate.validate_serving(doc)
+        assert problems and any(expect in p for p in problems), problems
+
+    def test_admission_count_drift_is_two_sided(self, gate):
+        """An admission split changing under the same budget means the
+        controller (or the workload) changed — fails in both directions,
+        it can't hide as 'fewer rejections, still passes'."""
+        assert gate._rule("submitted") == "two_sided"
+        assert gate._rule("admitted") == "two_sided"
+        assert gate._rule("peak_in_flight_bytes") == "higher_is_worse"
+        doc = self._doc_with_serving()
+        new = copy.deepcopy(doc)
+        new["entries"][-1]["metrics"]["admitted"] = 96.0
+        new["entries"][-1]["metrics"]["rejected"] = 0.0
+        problems = gate.compare(doc, new)
+        assert {p["metric"] for p in problems} == {"admitted", "rejected"}
+
+    def test_latency_drift_is_never_gated(self, gate):
+        doc = self._doc_with_serving()
+        new = copy.deepcopy(doc)
+        new["entries"][-1]["info"]["rates"]["200"]["p99_ms"] = 500.0
+        assert gate.compare(doc, new) == []
+
+    def test_serving_profiles_cover_every_suite(self):
+        from benchmarks.serving import PROFILES
+        assert set(PROFILES) == set(SUITES)
+
+
 class TestDirectionRules:
     def test_rules(self, gate):
         assert gate._rule("speedup_w43") == "lower_is_worse"

@@ -55,10 +55,10 @@ def test_file_line_anchors_are_checked(tmp_path):
 def test_readme_documents_every_executor():
     """Every executor the runtime registers must appear in the README's
     executor table (and nothing in the table may be stale)."""
-    from repro.core.api import _EXECUTORS
+    from repro import EXECUTORS
 
     readme = (ROOT / "README.md").read_text(encoding="utf-8")
-    for name in _EXECUTORS:
+    for name in EXECUTORS:
         assert f'`"{name}"`' in readme, \
             f'executor "{name}" is not documented in README.md'
 

@@ -73,7 +73,15 @@ class TestEventSchema:
             "trace_header", "wave_open", "wave_close", "dispatch",
             "kernel_dispatch", "queue_depth", "owner_override",
             "tile_cache", "sim_predict", "dep_msg", "manager_admit",
-            "stats"}
+            "stats", "admission_admit", "admission_defer",
+            "admission_reject", "admission_release",
+            "ckpt_save", "ckpt_restore"}
+        assert EVENT_FIELDS["admission_admit"] == {
+            "request", "bytes", "in_flight_bytes"}
+        assert EVENT_FIELDS["admission_reject"] == {
+            "request", "bytes", "in_flight_bytes", "reason"}
+        assert EVENT_FIELDS["ckpt_save"] == {
+            "epoch", "arrays", "tiles", "bytes"}
         assert EVENT_FIELDS["kernel_dispatch"] == {
             "wave", "executor", "fn", "tasks", "backend", "reason"}
         assert EVENT_FIELDS["dep_msg"] == {"manager", "msg", "count"}

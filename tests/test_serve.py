@@ -1,0 +1,378 @@
+"""repro.serve: streaming sessions, admission control, tile checkpoints.
+
+The serving acceptance bars: (a) the admission controller *provably*
+bounds in-flight footprint bytes — pinned across a 10^3-request stream;
+(b) the admission ledger closes (submitted == admitted + rejected once
+the session drains); (c) checkpoint/restore of shared BlockArray state
+is bit-identical across a simulated runtime restart; (d) every decision
+surfaces through ``repro.obs`` events and the ``admission_*`` stats.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro import RuntimeConfig, task
+from repro.obs.tracker import InMemoryTracker
+from repro.serve import (AdmissionController, RequestRejected, ServeConfig,
+                         Session, footprint_nbytes)
+from repro.serve.admission import ADMIT, DEFER, REJECT
+
+TILE = (4, 8)
+TILE_BYTES = 4 * 8 * 4          # float32
+ROW_BYTES = 8 * 4
+REQ_BYTES = TILE_BYTES + ROW_BYTES
+
+
+@task(in_="src", out="dest")
+def _double(src, dest=None):
+    return (src * 2.0)[:1]      # (4, 8) tile -> (1, 8) output row
+
+
+@task(inout="x")
+def _bump(x):
+    return x + 1.0
+
+
+def _session(budget_requests=4, **kw):
+    kw.setdefault("on_saturation", "queue")
+    serve = ServeConfig(budget_bytes=budget_requests * REQ_BYTES, **kw)
+    return Session(RuntimeConfig(executor="staged"), serve)
+
+
+def _arrays(s, n_tiles=8, n_slots=8):
+    kv = s.from_array(
+        np.arange(n_tiles * 4 * 8, dtype=np.float32).reshape(n_tiles * 4, 8),
+        TILE, name="kv")
+    out = s.zeros((n_slots, 8), (1, 8), name="out", state=False)
+    return kv, out
+
+
+def _req(s, kv, out, i, n_tiles=8, n_slots=8):
+    src, dst = kv[i % n_tiles, 0], out[i % n_slots, 0]
+    return s.submit(lambda: _double(src, dst), src, dst)
+
+
+# ---------------------------------------------------------------------------
+class TestFootprint:
+    def test_counts_distinct_tiles_once(self):
+        with Session(RuntimeConfig(executor="staged")) as s:
+            kv, out = _arrays(s)
+            assert footprint_nbytes([kv[0, 0]]) == TILE_BYTES
+            assert footprint_nbytes([kv[0, 0], kv[0, 0]]) == TILE_BYTES
+            assert footprint_nbytes([kv[0, 0], kv[1, 0]]) == 2 * TILE_BYTES
+            assert footprint_nbytes([kv[0, 0], out[0, 0]]) == REQ_BYTES
+
+    def test_whole_array_and_type_errors(self):
+        with Session(RuntimeConfig(executor="staged")) as s:
+            kv, _ = _arrays(s)
+            assert footprint_nbytes([kv]) == 8 * TILE_BYTES
+            with pytest.raises(TypeError, match="Region or BlockArray"):
+                footprint_nbytes([np.zeros(3)])
+
+
+# ---------------------------------------------------------------------------
+class TestAdmissionController:
+    def test_decisions_and_ledger(self):
+        ac = AdmissionController(100, on_saturation="queue")
+        assert ac.try_admit("a", 60) == ADMIT
+        assert ac.try_admit("b", 60) == DEFER          # over budget
+        assert ac.try_admit("big", 101) == REJECT      # oversize, always
+        ac.release("a", 60)
+        assert ac.has_room(60)
+        ac.admit_deferred("b", 60)
+        assert ac.submitted == 3
+        assert ac.admitted == 2 and ac.rejected == 1 and ac.deferred == 1
+        assert ac.peak_in_flight_bytes == 60
+
+    def test_reject_policy_sheds_instead_of_queueing(self):
+        ac = AdmissionController(100, on_saturation="reject")
+        assert ac.try_admit("a", 80) == ADMIT
+        assert ac.try_admit("b", 80) == REJECT
+        assert ac.admitted + ac.rejected == ac.submitted == 2
+
+    def test_depth_backpressure_defers_until_rings_drain(self):
+        depths = {0: 5}
+        ac = AdmissionController(1000, on_saturation="queue",
+                                 max_home_depth=2,
+                                 depths_fn=lambda: depths)
+        assert ac.try_admit("a", 10) == DEFER
+        assert not ac.has_room(10)
+        depths.clear()
+        assert ac.try_admit("b", 10) == ADMIT
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="budget_bytes"):
+            AdmissionController(0)
+        with pytest.raises(ValueError, match="on_saturation"):
+            AdmissionController(1, on_saturation="panic")
+        with pytest.raises(ValueError, match="max_home_depth"):
+            AdmissionController(1, max_home_depth=-1)
+
+
+# ---------------------------------------------------------------------------
+class TestServeConfig:
+    def test_validation(self):
+        with pytest.raises(ValueError, match="budget_bytes"):
+            ServeConfig(budget_bytes=0)
+        with pytest.raises(ValueError, match="on_saturation"):
+            ServeConfig(on_saturation="drop")
+        with pytest.raises(ValueError, match="checkpoint_dir"):
+            ServeConfig(checkpoint_every=5)
+
+    def test_sim_executor_refused(self):
+        with pytest.raises(ValueError, match="sim"):
+            Session(RuntimeConfig(executor="sim"))
+
+    def test_runtime_and_config_are_exclusive(self):
+        from repro import TaskRuntime
+        with TaskRuntime(executor="staged") as rt:
+            with pytest.raises(ValueError, match="not both"):
+                Session(RuntimeConfig(), runtime=rt)
+
+
+# ---------------------------------------------------------------------------
+class TestSessionStream:
+    def test_budget_bounds_thousand_request_stream(self):
+        """The tentpole bar: across a 10^3-request stream the in-flight
+        footprint never exceeds the byte budget — checked both on the
+        controller's peak and on every event the stream emitted."""
+        trk = InMemoryTracker()
+        budget = 4 * REQ_BYTES
+        with Session(RuntimeConfig(executor="staged", tracker=trk),
+                     ServeConfig(budget_bytes=budget)) as s:
+            kv, out = _arrays(s)
+            handles = [_req(s, kv, out, i) for i in range(1000)]
+            s.drain()
+            st = s.stats()
+        assert st.admission_submitted == 1000
+        assert st.admission_admitted + st.admission_rejected == 1000
+        assert st.admission_rejected == 0          # queueing, not shedding
+        assert 0 < st.admission_peak_bytes <= budget
+        assert st.admission_budget_bytes == budget
+        assert all(h.done() for h in handles)
+        # every admit/release event agrees: never over budget
+        highwater = [e.data["in_flight_bytes"]
+                     for e in trk.events if e.kind.startswith("admission_")]
+        assert highwater and max(highwater) <= budget
+
+    def test_results_and_state_are_correct(self):
+        with _session() as s:
+            kv, out = _arrays(s)
+            h = _req(s, kv, out, 2)
+            h.wait()
+            expect = np.asarray(kv.get_tile((2, 0)))[:1] * 2.0
+            np.testing.assert_array_equal(
+                np.asarray(out.get_tile((2, 0))), expect)
+            assert h.latency_s is not None and h.latency_s >= 0
+
+    def test_reject_policy_sheds_and_result_raises(self):
+        with _session(budget_requests=2, on_saturation="reject") as s:
+            kv, out = _arrays(s)
+            handles = [_req(s, kv, out, i) for i in range(6)]
+            states = [h.state for h in handles]
+            assert states.count("admitted") == 2
+            assert states.count("rejected") == 4
+            with pytest.raises(RequestRejected):
+                handles[-1].result()
+            s.drain()
+            st = s.stats()
+        assert st.admission_admitted == 2 and st.admission_rejected == 4
+        assert st.admission_peak_bytes == 2 * REQ_BYTES
+
+    def test_oversize_request_always_rejected(self):
+        with _session(budget_requests=1) as s:
+            kv, out = _arrays(s)
+            big = s.submit(lambda: _double(kv[0, 0], out[0, 0]),
+                           kv[0, 0], kv[1, 0], kv[2, 0], out[0, 0])
+            assert big.rejected()
+            # the session is not wedged: a fitting request still admits
+            ok = _req(s, kv, out, 3)
+            assert ok.result() is not None
+
+    def test_deferred_requests_admit_fifo(self):
+        with _session(budget_requests=1) as s:
+            kv, out = _arrays(s)
+            handles = [_req(s, kv, out, i) for i in range(5)]
+            assert [h.state for h in handles] == \
+                ["admitted"] + ["queued"] * 4
+            s.drain()
+            done = sorted(handles, key=lambda h: h.done_ts)
+        assert [h.name for h in done] == [h.name for h in handles]
+
+    def test_wait_forces_only_the_requests_cone(self):
+        with _session() as s:
+            kv, out = _arrays(s)
+            h1 = _req(s, kv, out, 0)
+            h2 = _req(s, kv, out, 1)
+            h2.wait()
+            assert h2.done() and not h1.done()
+            h1.wait()
+            assert h1.done()
+
+    def test_poll_retires_under_the_host_executor(self):
+        with Session(RuntimeConfig(executor="host", n_workers=2),
+                     ServeConfig(budget_bytes=8 * REQ_BYTES)) as s:
+            kv, out = _arrays(s)
+            handles = [_req(s, kv, out, i) for i in range(8)]
+            deadline = time.time() + 30
+            while not all(h.done() for h in handles) \
+                    and time.time() < deadline:
+                s.poll()
+                time.sleep(0.001)
+            assert all(h.done() for h in handles)
+
+    def test_submit_errors(self):
+        s = _session()
+        kv, out = _arrays(s)
+        with pytest.raises(ValueError, match="non-empty footprint"):
+            s.submit(lambda: None)
+        s.close()
+        with pytest.raises(RuntimeError, match="closed"):
+            _req(s, kv, out, 0)
+
+    def test_state_arrays_need_names(self):
+        with Session(RuntimeConfig(executor="staged")) as s:
+            with pytest.raises(ValueError, match="explicit name"):
+                s.zeros((4, 8), TILE)
+            s.zeros((4, 8), TILE, name="a")
+            with pytest.raises(ValueError, match="already registered"):
+                s.zeros((4, 8), TILE, name="a")
+            s.zeros((4, 8), TILE, state=False)     # scratch: no name needed
+
+    def test_stats_fields_absent_without_a_session(self):
+        from repro import TaskRuntime
+        with TaskRuntime(executor="staged") as rt:
+            st = rt.stats()
+        assert st.admission_submitted is None
+        assert st.admission_peak_bytes is None
+
+
+# ---------------------------------------------------------------------------
+class TestCheckpointRestore:
+    def _run(self, s, kv, out, n):
+        for i in range(n):
+            s.submit(lambda: _bump(kv[i % 8, 0]), kv[i % 8, 0])
+        s.drain()
+
+    def _tiles(self, ba):
+        return {idx: np.asarray(ba.get_tile(idx)).copy()
+                for idx in ba.home}
+
+    def test_restart_restores_bit_identical_state(self, tmp_path):
+        ckpt = str(tmp_path / "ckpt")
+        with Session(RuntimeConfig(executor="staged"),
+                     ServeConfig(checkpoint_dir=ckpt)) as s:
+            kv, out = _arrays(s)
+            self._run(s, kv, out, 13)
+            assert s.checkpoint(sync=True) == 1
+            self._run(s, kv, out, 7)
+            assert s.checkpoint(sync=True) == 2
+            expect = self._tiles(kv)
+        # close() committed one more (final) epoch of the same state
+
+        # simulated restart: a fresh runtime, blank same-geometry state
+        with Session(RuntimeConfig(executor="staged"),
+                     ServeConfig(checkpoint_dir=ckpt)) as s2:
+            kv2 = s2.zeros((8 * 4, 8), TILE, name="kv")
+            assert s2.restore_latest() == 3
+            got = self._tiles(kv2)
+            assert set(got) == set(expect)
+            for idx in expect:
+                np.testing.assert_array_equal(got[idx], expect[idx])
+                assert got[idx].dtype == expect[idx].dtype
+            # serving continues, and the next epoch lands after 3
+            self._run(s2, kv2, None, 3)
+            assert s2.checkpoint(sync=True) == 4
+
+    def test_async_checkpoint_commits_by_close(self, tmp_path):
+        from repro.ckpt import latest_epoch
+        ckpt = str(tmp_path / "ckpt")
+        with Session(RuntimeConfig(executor="staged"),
+                     ServeConfig(checkpoint_dir=ckpt)) as s:
+            kv, out = _arrays(s)
+            self._run(s, kv, out, 4)
+            assert s.checkpoint() == 1          # async: returns at once
+        # close() joined the writer and wrote the final epoch
+        assert latest_epoch(ckpt) == 2
+
+    def test_auto_checkpoint_every_n_requests(self, tmp_path):
+        from repro.ckpt import latest_epoch
+        ckpt = str(tmp_path / "ckpt")
+        with Session(RuntimeConfig(executor="staged"),
+                     ServeConfig(checkpoint_dir=ckpt, checkpoint_every=2,
+                                 async_checkpoint=False)) as s:
+            kv, out = _arrays(s)
+            self._run(s, kv, out, 4)            # 4 completions -> 2 epochs
+        assert latest_epoch(ckpt) >= 2
+
+    def test_epoch_layout_on_disk(self, tmp_path):
+        ckpt = tmp_path / "ckpt"
+        with Session(RuntimeConfig(executor="staged"),
+                     ServeConfig(checkpoint_dir=str(ckpt))) as s:
+            _arrays(s)
+            s.checkpoint(sync=True)
+        epoch = ckpt / "epoch_00000001"
+        assert (epoch / "manifest.json").is_file()
+        assert (epoch / "_COMMITTED").is_file()
+        assert list(epoch.glob("home_*.npz"))
+
+    def test_restore_with_no_checkpoint_is_none(self, tmp_path):
+        with Session(RuntimeConfig(executor="staged"),
+                     ServeConfig(checkpoint_dir=str(tmp_path))) as s:
+            _arrays(s)
+            assert s.restore_latest() is None
+
+    def test_restore_refuses_geometry_mismatch(self, tmp_path):
+        ckpt = str(tmp_path / "ckpt")
+        with Session(RuntimeConfig(executor="staged"),
+                     ServeConfig(checkpoint_dir=ckpt)) as s:
+            _arrays(s)
+            s.checkpoint(sync=True)
+        with Session(RuntimeConfig(executor="staged"),
+                     ServeConfig(checkpoint_dir=ckpt)) as s2:
+            s2.zeros((8 * 4, 8), (2, 8), name="kv")     # wrong block shape
+            with pytest.raises(ValueError):
+                s2.restore_latest()
+
+    def test_checkpoint_requires_configuration(self):
+        with Session(RuntimeConfig(executor="staged")) as s:
+            _arrays(s)
+            with pytest.raises(RuntimeError, match="checkpoint_dir"):
+                s.checkpoint()
+            with pytest.raises(RuntimeError, match="checkpoint_dir"):
+                s.restore_latest()
+
+
+# ---------------------------------------------------------------------------
+class TestObservability:
+    def test_admission_and_ckpt_events_emitted(self, tmp_path):
+        trk = InMemoryTracker()
+        with Session(RuntimeConfig(executor="staged", tracker=trk),
+                     ServeConfig(budget_bytes=REQ_BYTES,
+                                 checkpoint_dir=str(tmp_path))) as s:
+            kv, out = _arrays(s)
+            handles = [_req(s, kv, out, i) for i in range(3)]
+            s.drain()
+            s.checkpoint(sync=True)
+            s.restore_latest()
+        kinds = {e.kind for e in trk.events}
+        assert {"admission_admit", "admission_defer", "admission_release",
+                "ckpt_save", "ckpt_restore"} <= kinds
+        admit = trk.events_of("admission_admit")[0]
+        assert admit.data["bytes"] == REQ_BYTES
+        save = trk.events_of("ckpt_save")[0]
+        assert save.data["epoch"] == 1 and save.data["arrays"] == 1
+        assert all(h.done() for h in handles)
+
+    def test_reject_events_carry_the_reason(self):
+        trk = InMemoryTracker()
+        with Session(RuntimeConfig(executor="staged", tracker=trk),
+                     ServeConfig(budget_bytes=REQ_BYTES,
+                                 on_saturation="reject")) as s:
+            kv, out = _arrays(s)
+            _req(s, kv, out, 0)
+            _req(s, kv, out, 1)
+            s.drain()
+        (rej,) = trk.events_of("admission_reject")
+        assert rej.data["reason"] == "budget"

@@ -110,6 +110,61 @@ def validate_kernel_backend(doc) -> list[str]:
     return bad
 
 
+def validate_serving(doc) -> list[str]:
+    """Shape-check the streaming-serving entries (empty = valid).
+
+    The admission counters are a closed ledger: every submitted request
+    resolves as exactly one of admitted or rejected, and the controller's
+    peak in-flight footprint never exceeds the byte budget — structural
+    invariants of the controller, so an artifact violating them is
+    malformed regardless of any baseline.  The open-loop latency sweep
+    rides in ``info`` (wall clocks, never gated) and must only be finite
+    non-negative numbers.  No ``serving`` entries is valid (older
+    emitters).
+    """
+    bad: list[str] = []
+    entries = doc.get("entries")
+    if not isinstance(entries, list):
+        return bad
+    for e in entries:
+        if not isinstance(e, dict) or e.get("kind") != "serving":
+            continue
+        eid = e.get("id", "<serving>")
+        metrics = e.get("metrics") or {}
+        vals: dict[str, int] = {}
+        for key in ("submitted", "admitted", "rejected",
+                    "peak_in_flight_bytes", "budget_bytes"):
+            v = metrics.get(key)
+            if isinstance(v, bool) or not isinstance(v, (int, float)) \
+                    or not math.isfinite(v) or v < 0 or v != int(v):
+                bad.append(f"{eid}: metric {key!r} is not a "
+                           f"non-negative integer ({v!r})")
+            else:
+                vals[key] = int(v)
+        if len(vals) == 5:
+            if vals["admitted"] + vals["rejected"] != vals["submitted"]:
+                bad.append(
+                    f"{eid}: admission ledger leaks — admitted "
+                    f"({vals['admitted']}) + rejected ({vals['rejected']}) "
+                    f"!= submitted ({vals['submitted']})")
+            if vals["peak_in_flight_bytes"] > vals["budget_bytes"]:
+                bad.append(
+                    f"{eid}: peak in-flight {vals['peak_in_flight_bytes']}B "
+                    f"exceeds the budget {vals['budget_bytes']}B")
+        rates = (e.get("info") or {}).get("rates")
+        if not isinstance(rates, dict) or not rates:
+            bad.append(f"{eid}: info 'rates' missing/empty")
+            continue
+        for rate, r in rates.items():
+            for key in ("p50_ms", "p99_ms", "throughput_rps"):
+                v = (r if isinstance(r, dict) else {}).get(key)
+                if isinstance(v, bool) or not isinstance(v, (int, float)) \
+                        or not math.isfinite(v) or v < 0:
+                    bad.append(f"{eid}: rates[{rate!r}].{key} is not a "
+                               f"finite non-negative number ({v!r})")
+    return bad
+
+
 def timings_point(doc) -> dict | None:
     """One series point for the nightly append-only timing log: the
     timings block plus enough identity (suite, env) to plot it."""
@@ -248,7 +303,7 @@ def main(argv=None) -> int:
     with open(args.artifact, encoding="utf-8") as f:
         doc = json.load(f)
     bad = (validate_schema(doc) + validate_timings(doc)
-           + validate_kernel_backend(doc))
+           + validate_kernel_backend(doc) + validate_serving(doc))
     if bad:
         for b in bad:
             print(f"SCHEMA: {b}")
