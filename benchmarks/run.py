@@ -419,6 +419,14 @@ def build_bench(suite: str, *, skip_roofline: bool = True,
             e["metrics"]["kernel_fallbacks"] == 0
             and e["metrics"]["kernel_dispatches"] > 0
             for e in kb),
+        # descriptor-line batching really packs the wire (envelopes <
+        # logical messages) and the DES replay of the logical stream
+        # predicts the measured envelope/line counts for both pump modes
+        "dep_batching_packs":
+            spawn["metrics"]["dep_batches_8_homes_threaded"]
+            < spawn["metrics"]["dep_messages_8_homes"],
+        "dep_traffic_reconciled":
+            spawn["metrics"]["traffic_reconciled"] == 1.0,
         # serving admission is a closed ledger — every submitted request
         # resolved exactly one way, and the controller provably kept the
         # in-flight footprint inside the byte budget

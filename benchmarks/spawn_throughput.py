@@ -18,9 +18,33 @@ two neighbouring rows' segments, so every task carries a multi-block
 footprint spanning several homes and RAW/WAR chains recur with period
 ``G`` — enough dependence structure that admission does real work.
 
-Both managers run the same stream; a rolling checksum over each task's
-discovered dependence set (identical work charged to both) verifies they
-found the *same* dependences before any rate is reported.
+Every column shares ONE driver: spawns proceed in chunks of ``CHUNK``
+tasks, admissions drain at the chunk boundary (split-phase
+``analyze_begin``/``admit_finish`` where the manager supports it, plain
+``analyze`` per task where it doesn't), and retirement happens only
+between chunks.  Identical retire interleaving is what makes the
+dependence checksums comparable across central, sync-sharded and
+threaded-sharded runs — and the stencil's dependence age (``grid + 1``
+tasks) is far inside the ``WINDOW``-task live set, so the chunked
+retire lag cannot change any dependence set.  The checksum assertion
+against the central column verifies that empirically on every run.
+
+Three columns per manager count:
+
+* ``central``  — the §3.3 single-analyzer walk (one column total).
+* ``sharded``  — per-home managers, synchronous pump, one descriptor per
+  envelope (``batch_lines=1``): PR-7 wire behavior, the baseline the
+  tentpole must beat.
+* ``threaded`` — per-home managers behind pump threads with
+  line-batched envelopes (``batch_lines=8``): descriptors pack
+  ``DESCRIPTORS_PER_LINE`` per 32-byte line, one grant envelope answers
+  each query envelope, and the master never executes manager logic
+  inline.
+
+A reconciliation pass replays the recorded logical descriptor stream
+through ``sim.predict_dep_traffic`` and asserts the predicted envelope
+and line counts equal the measured ``dep_batches``/``dep_lines`` for
+both pump modes — the DES and the runtime charge the same wire traffic.
 
 CLI::
 
@@ -28,10 +52,10 @@ CLI::
     python -m benchmarks.spawn_throughput --suite smoke      # small + fast
 
 Bench integration: ``entry()`` emits a ``bddt-scc-bench/1`` entry whose
-``metrics`` are the deterministic counters (tasks, deps, messages —
-gate-safe) and whose ``info`` carries the measured rates (machine-speed
-dependent, never gated), matching how ``benchmarks.run`` treats wall
-times.
+``metrics`` are the deterministic counters (tasks, deps, messages,
+envelopes, lines, the reconciliation bit — gate-safe) and whose ``info``
+carries the measured rates (machine-speed dependent, never gated),
+matching how ``benchmarks.run`` treats wall times.
 """
 from __future__ import annotations
 
@@ -44,10 +68,21 @@ from repro.core.depman import ShardedDependenceManager
 from repro.core.deps import DependenceAnalyzer
 from repro.core.graph import DescriptorPool, TaskGraph
 from repro.core.placement import assign_homes
+from repro.core.sim import predict_dep_traffic
 
 # live-set bound: tasks complete (in spawn order — a valid topological
 # order of the stencil graph) once this many are in flight
 WINDOW = 256
+# spawn-chunk size: admissions drain (and the live window retires) at
+# chunk boundaries; amortizes the split-phase sync cost over many tasks
+CHUNK = 128
+# the batched column's envelope capacity, in 32-byte MPB lines
+BATCH_LINES = 8
+# pump threads for the threaded column: on a single-CPU host the win
+# comes from batching + amortized handoffs, not parallelism, so a small
+# thread pool beats one-thread-per-home (fewer wake/park round-trips);
+# the manager clamps this to [1, n_managers]
+PUMP_THREADS = 1
 
 
 def _noop(*_a, **_k):
@@ -74,37 +109,59 @@ def _retire(graph: TaskGraph, analyzer, pool: DescriptorPool,
 
 
 def run_stream(n_tasks: int, analyzer, ba: BlockArray,
-               window: int = WINDOW) -> dict:
+               window: int = WINDOW, chunk: int = CHUNK) -> dict:
     """Push ``n_tasks`` stencil tasks through one manager; returns the
-    measured rate plus the counters and dependence checksum."""
+    measured rate plus the counters and dependence checksum.
+
+    One driver for every manager: spawn ``chunk`` tasks, drain their
+    admissions, insert + checksum in spawn order, then retire the live
+    window down — so retire interleaving (and therefore the dependence
+    stream) is identical whichever analyzer runs.  Chunks are clamped to
+    half the window: the descriptor pool holds ``2 x window`` slots, so
+    a chunk can never exhaust it and force a retire while admissions are
+    still in flight (the determinism contract of the threaded pump)."""
     grid = ba.grid[0]
     seg = ba.grid[1]
+    chunk = max(1, min(chunk, window // 2))
+    split = hasattr(analyzer, "analyze_begin")
     pool = DescriptorPool(capacity=window * 2)
     graph = TaskGraph()
     live: deque = deque()
     csum = 0
     t0 = time.perf_counter()
-    for t in range(n_tasks):
-        i = t % grid
-        args = (InOut(ba[i, 0:seg]),
-                In(ba[(i + 1) % grid, 0:seg]),
-                In(ba[(i - 1) % grid, 0:seg]))
-        td = pool.acquire(_noop, args)
-        while td is None:
-            _retire(graph, analyzer, pool, live)
+    t = 0
+    while t < n_tasks:
+        n = min(chunk, n_tasks - t)
+        tds = []
+        for k in range(n):
+            i = (t + k) % grid
+            args = (InOut(ba[i, 0:seg]),
+                    In(ba[(i + 1) % grid, 0:seg]),
+                    In(ba[(i - 1) % grid, 0:seg]))
             td = pool.acquire(_noop, args)
-        td.spawn_order = t
-        deps = analyzer.analyze(td)
-        graph.insert(td, deps)
-        live.append(td)
-        # rolling checksum of the discovered dependence set — identical
-        # work on both managers, so rates stay comparable
-        acc = len(deps)
-        for d in deps:
-            acc += d.tid
-        csum = (csum * 1000003 + acc) % (1 << 61)
-        if len(live) >= window:
+            while td is None:            # pool pressure (clamp keeps
+                _retire(graph, analyzer, pool, live)   # this path cold)
+                td = pool.acquire(_noop, args)
+            td.spawn_order = t + k
+            if split:
+                analyzer.analyze_begin(td)
+            tds.append(td)
+        if split:
+            pairs = analyzer.admit_finish()
+        else:
+            pairs = [(td, analyzer.analyze(td)) for td in tds]
+        for td, deps in pairs:
+            graph.insert(td, deps)
+            live.append(td)
+            # rolling checksum of the discovered dependence set —
+            # identical work on every manager, so rates stay comparable
+            acc = len(deps)
+            for d in deps:
+                acc += d.tid
+            csum = (csum * 1000003 + acc) % (1 << 61)
+        while len(live) >= window:
             _retire(graph, analyzer, pool, live)
+        t += n
     while live:
         _retire(graph, analyzer, pool, live)
     wall = time.perf_counter() - t0
@@ -124,11 +181,16 @@ def _best_of(reps: int, make_analyzer, ba: BlockArray,
              n_tasks: int) -> dict:
     """Best-of-``reps`` rate (fresh analyzer state per rep — dependence
     metadata is per-analyzer, the array only carries the home map); the
-    counters and checksum are deterministic and asserted stable."""
+    counters and checksum are deterministic and asserted stable.  Each
+    rep's analyzer is shut down (pump threads joined) before the next
+    starts, so threaded reps never overlap."""
     best: dict | None = None
     for _ in range(reps):
         analyzer = make_analyzer()
         r = run_stream(n_tasks, analyzer, ba)
+        shutdown = getattr(analyzer, "shutdown", None)
+        if shutdown is not None:
+            shutdown()
         r["analyzer"] = analyzer
         if best is not None and r["dep_checksum"] != best["dep_checksum"]:
             raise AssertionError("nondeterministic dependence stream")
@@ -137,36 +199,93 @@ def _best_of(reps: int, make_analyzer, ba: BlockArray,
     return best
 
 
+def _sharded_column(h: int, ba: BlockArray, n_tasks: int, reps: int,
+                    central: dict, *, batch_lines: int,
+                    pump: str) -> dict:
+    threads = PUMP_THREADS if pump == "threaded" else None
+
+    def make():
+        mgr = ShardedDependenceManager(n_managers=h,
+                                       batch_lines=batch_lines, pump=pump,
+                                       pump_threads=threads)
+        mgr.register_array(ba)
+        return mgr
+
+    r = _best_of(reps, make, ba, n_tasks)
+    mgr = r.pop("analyzer")
+    r["dep_messages"] = mgr.dep_messages
+    r["dep_batches"] = mgr.dep_batches
+    r["dep_lines"] = mgr.dep_lines
+    r["pump_wall_s"] = mgr.pump_wall_s
+    r["admissions"] = list(mgr.admissions)
+    if r["dep_checksum"] != central["dep_checksum"]:
+        raise AssertionError(
+            f"sharded manager ({h} homes, {pump}) found different "
+            f"dependences than central: {r['dep_checksum']} != "
+            f"{central['dep_checksum']}")
+    return r
+
+
+def reconcile_traffic(n_tasks: int = 5000, homes: int = 8, grid: int = 64,
+                      seg: int = 8,
+                      batch_lines: int = BATCH_LINES) -> dict:
+    """Run the stream once per pump mode with traffic recording on and
+    replay the logical stream through ``sim.predict_dep_traffic``: the
+    flush policy depends only on the descriptor stream and the config,
+    so predicted envelope/line counts must equal the measured ones for
+    sync *and* threaded pumps — and the two pumps must agree with each
+    other."""
+    out: dict = {"batch_lines": batch_lines}
+    for pump in ("sync", "threaded"):
+        ba = build_array(grid, homes, seg)
+        mgr = ShardedDependenceManager(n_managers=homes,
+                                       batch_lines=batch_lines, pump=pump,
+                                       pump_threads=PUMP_THREADS,
+                                       record_traffic=True)
+        mgr.register_array(ba)
+        run_stream(n_tasks, mgr, ba)
+        mgr.shutdown()
+        pred = predict_dep_traffic(mgr.traffic_log, batch_lines,
+                                   mgr.traffic_deps)
+        out[pump] = {
+            "dep_messages": mgr.dep_messages,
+            "measured_batches": mgr.dep_batches,
+            "predicted_batches": pred["dep_batches"],
+            "measured_lines": mgr.dep_lines,
+            "predicted_lines": pred["dep_lines"],
+            "reconciled": (pred["dep_batches"] == mgr.dep_batches
+                           and pred["dep_lines"] == mgr.dep_lines),
+        }
+    out["pumps_agree"] = (
+        out["sync"]["measured_batches"] == out["threaded"]["measured_batches"]
+        and out["sync"]["measured_lines"] == out["threaded"]["measured_lines"])
+    out["reconciled"] = (out["sync"]["reconciled"]
+                         and out["threaded"]["reconciled"]
+                         and out["pumps_agree"])
+    return out
+
+
 def run_matrix(n_tasks: int, homes: list[int], grid: int = 64,
                seg: int = 8, reps: int = 3) -> dict:
-    """Central and sharded per manager count, best-of-``reps`` each (the
-    loop is wall-clock timed, so repetitions absorb scheduler noise);
-    verifies every run found the same dependences before reporting
-    rates."""
+    """Central, sync-sharded (``batch_lines=1``) and threaded-batched
+    (``batch_lines=BATCH_LINES``) per manager count, best-of-``reps``
+    each (the loop is wall-clock timed, so repetitions absorb scheduler
+    noise); verifies every run found the same dependences before
+    reporting rates."""
     results: dict = {"tasks": n_tasks, "grid": grid, "seg": seg}
     ba = build_array(grid, max(homes), seg)
     central = _best_of(reps, DependenceAnalyzer, ba, n_tasks)
     central.pop("analyzer")
     results["central"] = central
     results["sharded"] = {}
+    results["threaded"] = {}
     for h in homes:
         ba_h = build_array(grid, h, seg)
-
-        def make():
-            mgr = ShardedDependenceManager(n_managers=h)
-            mgr.register_array(ba_h)
-            return mgr
-
-        r = _best_of(reps, make, ba_h, n_tasks)
-        mgr = r.pop("analyzer")
-        r["dep_messages"] = mgr.dep_messages
-        r["admissions"] = list(mgr.admissions)
-        if r["dep_checksum"] != central["dep_checksum"]:
-            raise AssertionError(
-                f"sharded manager ({h} homes) found different dependences "
-                f"than central: {r['dep_checksum']} != "
-                f"{central['dep_checksum']}")
-        results["sharded"][h] = r
+        results["sharded"][h] = _sharded_column(
+            h, ba_h, n_tasks, reps, central, batch_lines=1, pump="sync")
+        results["threaded"][h] = _sharded_column(
+            h, ba_h, n_tasks, reps, central, batch_lines=BATCH_LINES,
+            pump="threaded")
     return results
 
 
@@ -176,17 +295,24 @@ def entry(suite: str = "smoke") -> dict:
     n_tasks = 100_000 if suite == "paper" else 10_000
     homes = [1, 2, 4, 8]
     res = run_matrix(n_tasks, homes)
+    rec = reconcile_traffic(n_tasks=min(n_tasks, 5000))
     central = res["central"]
     at4 = res["sharded"][4]
+    sync8 = res["sharded"][8]
+    thr8 = res["threaded"][8]
     info = {
         "suite": suite,
         "grid": res["grid"],
         "central_tasks_per_s": central["tasks_per_s"],
         "speedup_at_4_homes": (at4["tasks_per_s"] /
                                central["tasks_per_s"]),
+        "threaded_speedup_8_homes": (thr8["tasks_per_s"] /
+                                     sync8["tasks_per_s"]),
+        "threaded_pump_wall_s_8_homes": thr8["pump_wall_s"],
     }
-    for h, r in res["sharded"].items():
-        info[f"sharded_{h}_tasks_per_s"] = r["tasks_per_s"]
+    for h in homes:
+        info[f"sharded_{h}_tasks_per_s"] = res["sharded"][h]["tasks_per_s"]
+        info[f"threaded_{h}_tasks_per_s"] = res["threaded"][h]["tasks_per_s"]
     return {
         "id": f"spawn-throughput-{suite}",
         "kind": "spawn_throughput",
@@ -195,6 +321,10 @@ def entry(suite: str = "smoke") -> dict:
             "deps_found": float(central["deps_found"]),
             "blocks_walked": float(central["blocks_walked"]),
             "dep_messages_4_homes": float(at4["dep_messages"]),
+            "dep_messages_8_homes": float(thr8["dep_messages"]),
+            "dep_batches_8_homes_threaded": float(thr8["dep_batches"]),
+            "dep_lines_8_homes_threaded": float(thr8["dep_lines"]),
+            "traffic_reconciled": 1.0 if rec["reconciled"] else 0.0,
         },
         "info": info,
     }
@@ -216,12 +346,23 @@ def main(argv=None) -> int:
     n_tasks = args.tasks or (100_000 if args.suite == "paper" else 10_000)
     res = run_matrix(n_tasks, args.homes, grid=args.grid, reps=args.reps)
     c = res["central"]
-    print(f"central : {c['tasks_per_s']:>12.0f} tasks/s  "
+    print(f"central    : {c['tasks_per_s']:>12.0f} tasks/s  "
           f"({c['deps_found']} deps, {c['blocks_walked']} blocks)")
-    for h, r in res["sharded"].items():
-        print(f"sharded{h:>2}: {r['tasks_per_s']:>12.0f} tasks/s  "
-              f"(x{r['tasks_per_s'] / c['tasks_per_s']:.2f} vs central, "
-              f"{r['dep_messages']} msgs, admits {r['admissions']})")
+    for h in args.homes:
+        s = res["sharded"][h]
+        t = res["threaded"][h]
+        print(f"sharded {h:>2} : {s['tasks_per_s']:>12.0f} tasks/s  "
+              f"(x{s['tasks_per_s'] / c['tasks_per_s']:.2f} vs central, "
+              f"{s['dep_messages']} msgs = {s['dep_batches']} envelopes)")
+        print(f"threaded{h:>2} : {t['tasks_per_s']:>12.0f} tasks/s  "
+              f"(x{t['tasks_per_s'] / s['tasks_per_s']:.2f} vs sync, "
+              f"{t['dep_messages']} msgs in {t['dep_batches']} envelopes"
+              f" / {t['dep_lines']} lines)")
+    rec = reconcile_traffic(n_tasks=min(n_tasks, 5000))
+    print(f"traffic reconciliation (sim vs measured, both pumps): "
+          f"{'OK' if rec['reconciled'] else 'MISMATCH'} "
+          f"({rec['threaded']['measured_batches']} envelopes, "
+          f"{rec['threaded']['measured_lines']} lines)")
     return 0
 
 

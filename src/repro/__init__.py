@@ -18,12 +18,13 @@ from . import jax_compat as _jax_compat
 
 _jax_compat.install()
 
-from .core import (AccessMode, BlockArray, DEP_MANAGERS, EXECUTORS,  # noqa: E402
-                   ExecutorKind, DepManagerKind, Executor, In, InOut,
-                   KERNEL_BACKENDS, KernelBackend, Out, PLACEMENTS,
-                   PlacementKind, Region, RuntimeConfig, RuntimeStats,
-                   SCHEDULING_POLICIES, STATS_SCHEMA, SchedulingPolicy,
-                   TaskFuture, TaskRuntime, current_runtime, task, wait_on)
+from .core import (AccessMode, BlockArray, DEP_MANAGERS, DEP_PUMPS,  # noqa: E402
+                   EXECUTORS, ExecutorKind, DepManagerKind, DepPumpKind,
+                   Executor, In, InOut, KERNEL_BACKENDS, KernelBackend,
+                   Out, PLACEMENTS, PlacementKind, Region, RuntimeConfig,
+                   RuntimeStats, SCHEDULING_POLICIES, STATS_SCHEMA,
+                   SchedulingPolicy, TaskFuture, TaskRuntime,
+                   current_runtime, task, wait_on)
 
 __version__ = "1.0.0"
 
@@ -35,9 +36,9 @@ __all__ = [
     # configuration + results
     "RuntimeConfig", "RuntimeStats", "STATS_SCHEMA", "TaskFuture",
     # typed configuration choices
-    "ExecutorKind", "DepManagerKind", "SchedulingPolicy", "PlacementKind",
-    "KernelBackend", "EXECUTORS", "DEP_MANAGERS", "SCHEDULING_POLICIES",
-    "PLACEMENTS", "KERNEL_BACKENDS",
+    "ExecutorKind", "DepManagerKind", "DepPumpKind", "SchedulingPolicy",
+    "PlacementKind", "KernelBackend", "EXECUTORS", "DEP_MANAGERS",
+    "DEP_PUMPS", "SCHEDULING_POLICIES", "PLACEMENTS", "KERNEL_BACKENDS",
     # extension surface
     "Executor",
     "__version__",

@@ -17,11 +17,12 @@ non cache-coherent hardware — implemented as:
 * :mod:`sim`        — discrete-event simulation of the SCC runtime (Figs 5-7)
 * :mod:`pipeline`   — pipeline-parallel schedules derived by dependence analysis
 """
-from .api import (DEP_MANAGERS, EXECUTORS, KERNEL_BACKENDS, PLACEMENTS,
-                  SCHEDULING_POLICIES, STATS_SCHEMA, DepManagerKind,
-                  ExecutorKind, KernelBackend, PlacementKind, RuntimeConfig,
-                  RuntimeStats, SchedulingPolicy, TaskFuture,
-                  current_runtime, task, wait_on)
+from .api import (DEP_MANAGERS, DEP_PUMPS, EXECUTORS, KERNEL_BACKENDS,
+                  PLACEMENTS, SCHEDULING_POLICIES, STATS_SCHEMA,
+                  DepManagerKind, DepPumpKind, ExecutorKind, KernelBackend,
+                  PlacementKind, RuntimeConfig, RuntimeStats,
+                  SchedulingPolicy, TaskFuture, current_runtime, task,
+                  wait_on)
 from .blocks import (AccessMode, BlockArray, In, InOut, Out, Region,
                      coerce_mode)
 from .depman import ShardedDependenceManager
@@ -37,9 +38,9 @@ __all__ = [
     # configuration + results
     "RuntimeConfig", "RuntimeStats", "STATS_SCHEMA", "TaskFuture",
     # typed configuration choices (one source for every stringly field)
-    "ExecutorKind", "DepManagerKind", "SchedulingPolicy", "PlacementKind",
-    "KernelBackend", "EXECUTORS", "DEP_MANAGERS", "SCHEDULING_POLICIES",
-    "PLACEMENTS", "KERNEL_BACKENDS",
+    "ExecutorKind", "DepManagerKind", "DepPumpKind", "SchedulingPolicy",
+    "PlacementKind", "KernelBackend", "EXECUTORS", "DEP_MANAGERS",
+    "DEP_PUMPS", "SCHEDULING_POLICIES", "PLACEMENTS", "KERNEL_BACKENDS",
     # extension surfaces
     "Executor", "ShardedDependenceManager",
 ]

@@ -68,10 +68,10 @@ from .graph import TaskDescriptor
 
 __all__ = ["task", "TaskFn", "TaskFuture", "RuntimeConfig", "RuntimeStats",
            "STATS_SCHEMA", "current_runtime", "wait_on",
-           "ExecutorKind", "DepManagerKind", "SchedulingPolicy",
-           "PlacementKind", "KernelBackend",
-           "EXECUTORS", "DEP_MANAGERS", "SCHEDULING_POLICIES",
-           "PLACEMENTS", "KERNEL_BACKENDS"]
+           "ExecutorKind", "DepManagerKind", "DepPumpKind",
+           "SchedulingPolicy", "PlacementKind", "KernelBackend",
+           "EXECUTORS", "DEP_MANAGERS", "DEP_PUMPS",
+           "SCHEDULING_POLICIES", "PLACEMENTS", "KERNEL_BACKENDS"]
 
 
 # ---------------------------------------------------------------------------
@@ -175,6 +175,17 @@ class DepManagerKind(_ChoiceEnum):
     SHARDED = "sharded"
 
 
+class DepPumpKind(_ChoiceEnum):
+    """``RuntimeConfig.dep_pump`` — how sharded home managers are
+    pumped: inline on the master (``sync``), on per-home worker threads
+    (``threaded``), or resolved from ``REPRO_DEPMAN_THREADS`` at runtime
+    construction (``auto``, the default).  Bit-identical schedules and
+    dependence counts either way."""
+    AUTO = "auto"
+    SYNC = "sync"
+    THREADED = "threaded"
+
+
 class SchedulingPolicy(_ChoiceEnum):
     """``RuntimeConfig.policy`` — running-mode ready-queue policy (§3.4)."""
     ROUND_ROBIN = "round_robin"
@@ -198,6 +209,7 @@ class KernelBackend(_ChoiceEnum):
 
 EXECUTORS = tuple(m.value for m in ExecutorKind)
 DEP_MANAGERS = tuple(m.value for m in DepManagerKind)
+DEP_PUMPS = tuple(m.value for m in DepPumpKind)
 SCHEDULING_POLICIES = tuple(m.value for m in SchedulingPolicy)
 PLACEMENTS = tuple(m.value for m in PlacementKind)
 KERNEL_BACKENDS = tuple(m.value for m in KernelBackend)
@@ -243,6 +255,22 @@ class RuntimeConfig:
       MPB-style channels).  Both produce bit-identical schedules; sharded
       removes the global admission bottleneck and is charged as message
       traffic by the DES.
+    * ``dep_pump``    — sharded manager pumping: ``"sync"`` (the master
+      services manager inboxes inline at sync points), ``"threaded"``
+      (each home manager runs on a pump worker thread; the master is a
+      pure producer posting envelopes and draining grant rings) or
+      ``"auto"`` (the default: threaded iff ``REPRO_DEPMAN_THREADS``
+      is a positive integer, which also caps the thread count).  All
+      modes are bit-identical in schedules, numerics and dependence
+      counts; ignored under ``dep_manager="central"``.
+    * ``dep_batch_lines`` — envelope capacity of the sharded manager's
+      descriptor batching, in 32-byte MPB lines (2 descriptors per
+      line).  Logical ``dep_query``/``release`` descriptors bound for
+      one home coalesce into a single multi-descriptor ``DepMessage``
+      flushed at wave boundaries and on ring pressure; managers answer
+      one grant envelope per query envelope.  ``1`` disables coalescing
+      (one descriptor per envelope, the pre-batching wire traffic);
+      the default is 4 lines (8 descriptor slots per envelope).
     * ``policy``      — running-mode scheduling policy (§3.4).
     * ``placement`` / ``n_controllers`` — block -> memory-controller map;
       the sharded executor reuses the same homes as mesh-device homes.
@@ -292,6 +320,8 @@ class RuntimeConfig:
     mpb_slots: int = 16
     pool_capacity: int = 4096
     dep_manager: str | DepManagerKind = "central"
+    dep_pump: str | DepPumpKind = "auto"
+    dep_batch_lines: int = 4
     policy: str | SchedulingPolicy = "round_robin"
     placement: str | PlacementKind = "striped"
     n_controllers: int = 4
@@ -310,6 +340,7 @@ class RuntimeConfig:
     CHOICES = {
         "executor": (ExecutorKind, EXECUTORS),
         "dep_manager": (DepManagerKind, DEP_MANAGERS),
+        "dep_pump": (DepPumpKind, DEP_PUMPS),
         "policy": (SchedulingPolicy, SCHEDULING_POLICIES),
         "placement": (PlacementKind, PLACEMENTS),
         "kernel_backend": (KernelBackend, KERNEL_BACKENDS),
@@ -326,7 +357,7 @@ class RuntimeConfig:
                           for f in norm) \
             else dataclasses.replace(self, **norm)
         for fld in ("n_workers", "mpb_slots", "pool_capacity",
-                    "n_controllers"):
+                    "n_controllers", "dep_batch_lines"):
             if getattr(cfg, fld) < 1:
                 raise ValueError(f"{fld} must be >= 1")
         if cfg.owner_skew_threshold < 0:
@@ -408,8 +439,18 @@ class RuntimeStats:
     bytes_staged: int | None = None
     # sharded dependence manager: total dep_query/dep_grant/release
     # messages over the MPB channels, and per-manager admission counts
-    # (None under the central analyzer)
+    # (None under the central analyzer).  ``dep_messages`` counts
+    # *logical* descriptors regardless of batching; ``dep_batches`` the
+    # multi-descriptor envelopes actually sent (== dep_messages when
+    # ``dep_batch_lines=1``, strictly fewer when batching engages);
+    # ``dep_lines`` the 32-byte MPB lines those envelopes occupied;
+    # ``pump_wall_s`` the wall seconds spent inside manager servicing
+    # (pump-thread busy time under dep_pump="threaded", the master's
+    # inline service time under "sync")
     dep_messages: int | None = None
+    dep_batches: int | None = None
+    dep_lines: int | None = None
+    pump_wall_s: float | None = None
     manager_admissions: list[int] | None = None
     # serving admission controller (``repro.serve``): request counters
     # and the in-flight footprint high-water mark against the byte

@@ -28,10 +28,28 @@ from typing import Optional
 from .graph import TaskDescriptor
 
 __all__ = ["SlotState", "MPBQueue", "MPBChannel", "MPB_LINE_BYTES",
-           "MPB_BYTES_PER_CORE"]
+           "MPB_BYTES_PER_CORE", "DESC_BYTES", "DESCRIPTORS_PER_LINE",
+           "lines_for"]
 
 MPB_LINE_BYTES = 32          # one MPB cache line (§3.2)
 MPB_BYTES_PER_CORE = 8192    # 8 KB of on-chip SRAM per core
+
+# Dependence-protocol descriptor packing (§3.2): one region-run or grant
+# descriptor is 16 bytes (array id + tile range, or a header plus packed
+# predecessor ids), so two descriptors share each 32-byte MPB line.  The
+# dependence manager, the DES, and the traffic predictor all count lines
+# through :func:`lines_for`, which is what keeps predicted and measured
+# line counts reconciled.
+DESC_BYTES = 16
+DESCRIPTORS_PER_LINE = MPB_LINE_BYTES // DESC_BYTES
+
+
+def lines_for(slots: int) -> int:
+    """MPB lines occupied by ``slots`` 16-byte descriptors (>= 1: even an
+    empty envelope spends its header line)."""
+    if slots <= 0:
+        return 1
+    return -(-slots // DESCRIPTORS_PER_LINE)
 
 
 class SlotState(enum.Enum):
@@ -161,12 +179,18 @@ class MPBChannel:
     task descriptor.
 
     Unlike :class:`MPBQueue` this ring is lock-free even under CPython:
-    the master pumps each manager synchronously (single-threaded SPSC —
-    one producer, one consumer, never concurrently), so the protocol is
-    pure ring discipline.  ``try_send`` refuses when full (the producer
-    must pump the consumer — backpressure, never blocking), ``recv_all``
-    drains in FIFO order.  The DES charges one MPB round-trip per
-    message via ``SCCParams.mpb_write_s``.
+    the discipline is strictly SPSC — exactly one producer thread and one
+    consumer thread per ring (under ``dep_pump="sync"`` both roles run on
+    the master; under ``dep_pump="threaded"`` the consumer is the home's
+    pump thread).  ``try_send`` refuses when full (the producer must let
+    the consumer progress — backpressure, never blocking); ``recv_all``
+    drains in FIFO order one ``popleft`` at a time, so a message appended
+    concurrently by the producer is either drained this call or intact
+    for the next (a snapshot-then-clear drain would drop it).  The GIL
+    plus ``deque``'s atomic append/popleft stand in for the SCC's
+    per-line fences.  The DES charges ``SCCParams.mpb_write_s`` per MPB
+    *line*, with several descriptors packed per line
+    (:data:`DESCRIPTORS_PER_LINE`).
     """
 
     def __init__(self, name: str, n_slots: int = 16):
@@ -191,12 +215,18 @@ class MPBChannel:
         return True
 
     def recv_all(self) -> list:
-        """Consumer: drain every pending message in FIFO order."""
-        if not self._ring:
+        """Consumer: drain every pending message in FIFO order.
+
+        Pops one slot at a time so it is safe against a producer thread
+        appending concurrently (SPSC: this method has exactly one
+        caller thread per ring); a message appended mid-drain waits for
+        the next call, which also bounds one drain at the ring depth."""
+        ring = self._ring
+        n = len(ring)
+        if not n:
             return []
-        out = list(self._ring)
-        self._ring.clear()
-        return out
+        pop = ring.popleft
+        return [pop() for _ in range(n)]
 
     def __len__(self) -> int:
         return len(self._ring)

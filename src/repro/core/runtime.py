@@ -80,10 +80,27 @@ class TaskRuntime:
         self.pool = DescriptorPool(config.pool_capacity)
         if config.dep_manager == "sharded":
             from .depman import ShardedDependenceManager
+            # "auto" resolves here, at construction: threaded iff
+            # REPRO_DEPMAN_THREADS parses as a positive integer (which
+            # also caps the pump-thread count); explicit "sync" /
+            # "threaded" are always honored regardless of environment
+            pump = config.dep_pump
+            if pump == "auto":
+                import os
+                try:
+                    n_threads = int(os.environ.get(
+                        "REPRO_DEPMAN_THREADS", "0"))
+                except ValueError:
+                    n_threads = 0
+                pump = "threaded" if n_threads > 0 else "sync"
+            self.dep_pump = pump
             self.analyzer = ShardedDependenceManager(
                 n_managers=config.n_controllers,
-                channel_slots=config.mpb_slots)
+                channel_slots=config.mpb_slots,
+                batch_lines=config.dep_batch_lines,
+                pump=pump)
         else:
+            self.dep_pump = None
             self.analyzer = DependenceAnalyzer()
         self.queues = [MPBQueue(w, config.mpb_slots)
                        for w in range(config.n_workers)]
@@ -137,6 +154,7 @@ class TaskRuntime:
                                dep_managers=(config.n_controllers
                                              if config.dep_manager ==
                                              "sharded" else None),
+                               dep_batch_lines=config.dep_batch_lines,
                                kernel_backend=config.kernel_backend)
         if config.executor == ExecutorKind.SHARDED:
             from .sharded import ShardedExecutor
@@ -253,6 +271,12 @@ class TaskRuntime:
     def barrier(self) -> None:
         t0 = time.perf_counter()
         self._exec.barrier()
+        quiesce = getattr(self.analyzer, "quiesce", None)
+        if quiesce is not None:
+            # sharded manager: flush buffered release descriptors and
+            # wait out the pump threads so metadata and the batch/line
+            # counters are exact at the barrier
+            quiesce()
         self.barrier_time_s += time.perf_counter() - t0
         assert self.graph.quiescent
 
@@ -261,6 +285,11 @@ class TaskRuntime:
             return
         self._closed = True
         self._exec.shutdown()
+        stop_analyzer = getattr(self.analyzer, "shutdown", None)
+        if stop_analyzer is not None:
+            # quiesces and joins the dependence pump threads, so the
+            # stats emitted below carry final counter values
+            stop_analyzer()
         if self.obs.enabled:
             # the final stats snapshot, in the same schema to_json() emits
             # — one source of truth for the console summary and reports
@@ -339,6 +368,9 @@ class TaskRuntime:
         # admissions (duck-typed like the executor extras above)
         if getattr(self.analyzer, "dep_messages", None) is not None:
             s.dep_messages = self.analyzer.dep_messages
+            s.dep_batches = self.analyzer.dep_batches
+            s.dep_lines = self.analyzer.dep_lines
+            s.pump_wall_s = self.analyzer.pump_wall_s
             s.manager_admissions = list(self.analyzer.admissions)
         # serving admission controller (attached by repro.serve.Session)
         if self.admission is not None:

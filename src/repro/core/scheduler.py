@@ -92,6 +92,10 @@ class MasterScheduler:
         # single master-side ready queue
         self._ready_mgr = analyzer if hasattr(analyzer, "push_ready") \
             else None
+        # sharded dependence manager: buffered release descriptors are
+        # flushed at wave boundaries (end of release_all) — cached here
+        # because release_all sits on the polling hot loop
+        self._dep_flush = getattr(analyzer, "flush", None)
         self.block_last_worker: dict = {}
         self._rr_last = -1
         self._rng = random.Random(seed)
@@ -224,8 +228,17 @@ class MasterScheduler:
         return True
 
     def release_all(self) -> None:
+        """Drain the completion queue, then flush the dependence
+        manager's buffered release descriptors — the wave-boundary
+        flush of the line batcher.  Grant arrival may be asynchronous
+        under ``dep_pump="threaded"``, but the wave order stays pinned:
+        admissions complete in spawn order before any task here was
+        marked executed, so the release stream (and therefore the
+        batcher's flush points) is identical across pump modes."""
         while self.release_one():
             pass
+        if self._dep_flush is not None:
+            self._dep_flush()
 
     # -- the polling loop itself --------------------------------------------------
     def polling_step(self) -> None:

@@ -22,10 +22,12 @@ import numpy as np
 
 from .costmodel import (SCCParams, core_core_hops, core_mc_hops,
                         master_core_choice, worker_order)
+from .depman import grant_slots
 from .executor import ExecutorBase
+from .mpb import DESCRIPTORS_PER_LINE, lines_for
 
 __all__ = ["SimTask", "SimResult", "SimExecutor", "FlopcountCost",
-           "simulate", "sequential_time"]
+           "simulate", "sequential_time", "predict_dep_traffic"]
 
 
 @dataclass
@@ -184,6 +186,7 @@ class SimExecutor(ExecutorBase):
                  mpb_slots: int = 16, cost_fn=None,
                  params: SCCParams | None = None,
                  dep_managers: int | None = None,
+                 dep_batch_lines: int = 1,
                  kernel_backend: str = "xla"):
         self.graph = graph
         self.scheduler = scheduler
@@ -193,8 +196,10 @@ class SimExecutor(ExecutorBase):
         self.params = params or SCCParams()
         # RuntimeConfig.dep_manager="sharded": charge spawns as manager
         # message traffic + parallel per-home walks instead of one
-        # master-side walk (None = the central §3.3 cost)
+        # master-side walk (None = the central §3.3 cost); batch_lines>1
+        # amortizes the per-descriptor line charge (line packing)
         self.dep_managers = dep_managers
+        self.dep_batch_lines = dep_batch_lines
         # RuntimeConfig.kernel_backend="pallas": predict which waves the
         # wave-kernel layer would fuse (same grouping + eligibility the
         # staged executor uses) and charge their write-back traffic at
@@ -310,7 +315,8 @@ class SimExecutor(ExecutorBase):
                      for td in self.pending]
         self.last_result = simulate(sim_tasks, self.n_workers, self.params,
                                     mpb_slots=self.mpb_slots,
-                                    dep_managers=self.dep_managers)
+                                    dep_managers=self.dep_managers,
+                                    dep_batch_lines=self.dep_batch_lines)
         self.predicted_total_s += self.last_result.total_s
         if self.obs.enabled:
             # predicted (parallel DES makespan) vs configured cost (the
@@ -343,7 +349,8 @@ def sequential_time(tasks: list[SimTask], p: SCCParams,
 def simulate(tasks: list[SimTask], n_workers: int,
              p: SCCParams = SCCParams(), *, mpb_slots: int = 16,
              placement_aware: bool = True,
-             dep_managers: int | None = None) -> SimResult:
+             dep_managers: int | None = None,
+             dep_batch_lines: int = 1) -> SimResult:
     """Run the master/worker protocol over the task graph.
 
     ``dep_managers`` switches the spawn/release charges to sharded
@@ -354,6 +361,14 @@ def simulate(tasks: list[SimTask], n_workers: int,
     walk (they overlap — the distributed-manager win); a release adds one
     message per involved manager.  ``None`` is the paper's central §3.3
     walk on the master.
+
+    ``dep_batch_lines`` mirrors ``RuntimeConfig.dep_batch_lines``: at 1
+    every descriptor crosses the mesh in its own 32-byte MPB line (the
+    pre-batching wire behavior, one ``mpb_write_s`` per message); above 1
+    the master packs ``DESCRIPTORS_PER_LINE`` descriptors per line, so
+    the steady-state per-descriptor charge amortizes to
+    ``1/DESCRIPTORS_PER_LINE`` of a line write — the same line-packing
+    the measured runtime reports as ``dep_lines < dep_messages``.
     """
     master = master_core_choice()
     cores = worker_order(master)[:n_workers]
@@ -503,6 +518,18 @@ def simulate(tasks: list[SimTask], n_workers: int,
             slices[m] = slices.get(m, 0.0) + b
         return slices
 
+    def dep_line_s(m: int, slots: int = 1) -> float:
+        """One direction of manager ``m``'s descriptor traffic, charged
+        per 32-byte MPB line.  Unbatched (``dep_batch_lines <= 1``) a
+        descriptor rides alone — ``lines_for(slots)`` full line writes,
+        exactly the pre-batching charge.  Batched, envelopes pack
+        ``DESCRIPTORS_PER_LINE`` descriptors per line, so the amortized
+        steady-state charge is ``slots/DESCRIPTORS_PER_LINE`` lines."""
+        hops = core_mc_hops(master, m % 4)
+        if dep_batch_lines <= 1:
+            return lines_for(slots) * p.mpb_write_s(hops)
+        return (slots / DESCRIPTORS_PER_LINE) * p.mpb_write_s(hops)
+
     def spawn_cost(task: SimTask) -> float:
         """Master-side initiation charge (§3.3): central = base + one
         walk over the whole footprint; sharded = base + one MPB
@@ -514,7 +541,8 @@ def simulate(tasks: list[SimTask], n_workers: int,
         slices = manager_slices(task)
         t = p.seconds(p.spawn_base_cycles)
         for m in slices:
-            t += 2.0 * p.mpb_write_s(core_mc_hops(master, m % 4))
+            # dep_query out + dep_grant back, each one descriptor slot
+            t += 2.0 * dep_line_s(m)
         t += p.seconds(p.dep_block_cycles * max(slices.values()))
         return t
 
@@ -524,9 +552,9 @@ def simulate(tasks: list[SimTask], n_workers: int,
             task = completion.pop()
             master_t += p.seconds(p.release_cycles)
             if dep_managers:
-                # completion fan-out: one release message per manager
+                # completion fan-out: one release descriptor per manager
                 for m in manager_slices(task):
-                    master_t += p.mpb_write_s(core_mc_hops(master, m % 4))
+                    master_t += dep_line_s(m)
             for dep in task.dependents:
                 dep.deps_remaining -= 1
                 if dep.deps_remaining == 0:
@@ -579,3 +607,71 @@ def simulate(tasks: list[SimTask], n_workers: int,
         master_busy_s=master_t,
         tasks=len(tasks),
     )
+
+
+def predict_dep_traffic(events: list[tuple], batch_lines: int,
+                        grant_deps: dict[int, int] | None = None) -> dict:
+    """Replay the descriptor-line batcher's flush policy over a recorded
+    logical stream and predict the wire traffic it produces.
+
+    ``events`` is a ``ShardedDependenceManager(record_traffic=True)``
+    ``traffic_log``: ``("desc", home, kind, slots, qid)`` per logical
+    descriptor posted (``qid`` numbers queries positionally, ``None``
+    for releases), ``("sync",)`` per flush-all point (barriers, wave
+    boundaries, ``admit_finish``), and ``("flush", home)`` per *measured*
+    envelope — which this replay deliberately ignores: it re-derives
+    every flush from the policy alone (capacity ``batch_lines *
+    DESCRIPTORS_PER_LINE`` slots, flush-per-descriptor at
+    ``batch_lines <= 1``, flush-all at syncs), which is what makes the
+    returned counts a prediction that can *disagree* with the measured
+    ``dep_batches``/``dep_lines`` if either side drifts.
+
+    ``grant_deps`` is the manager's ``traffic_deps`` (query id -> deps in
+    its grant); each query-carrying envelope is answered by exactly one
+    grant envelope whose slots are ``grant_slots`` per query.
+
+    The flush policy depends only on the logical stream and the config —
+    never on consumer timing — so the prediction must reconcile exactly
+    for sync *and* threaded pumps; ``tests/test_sim.py`` and the
+    spawn-throughput benchmark assert it does.
+    """
+    grant_deps = grant_deps or {}
+    cap = max(1, batch_lines) * DESCRIPTORS_PER_LINE
+    buf_slots: dict[int, int] = {}       # home -> buffered slots
+    buf_qids: dict[int, list] = {}       # home -> queries in envelope
+    out = {"batches_posted": 0, "lines_posted": 0,
+           "batches_granted": 0, "lines_granted": 0}
+
+    def flush(home: int) -> None:
+        slots = buf_slots.get(home, 0)
+        if not slots:
+            return
+        out["batches_posted"] += 1
+        out["lines_posted"] += lines_for(slots)
+        qids = buf_qids.get(home)
+        if qids:
+            gslots = sum(grant_slots(grant_deps.get(q, 0)) for q in qids)
+            out["batches_granted"] += 1
+            out["lines_granted"] += lines_for(gslots)
+        buf_slots[home] = 0
+        buf_qids[home] = []
+
+    for ev in events:
+        if ev[0] == "desc":
+            _, home, kind, slots, qid = ev
+            if buf_slots.get(home, 0) and \
+                    buf_slots[home] + slots > cap:
+                flush(home)
+            buf_slots[home] = buf_slots.get(home, 0) + slots
+            if kind == "dep_query":
+                buf_qids.setdefault(home, []).append(qid)
+            if batch_lines <= 1:
+                flush(home)
+        elif ev[0] == "sync":
+            for home in list(buf_slots):
+                flush(home)
+    for home in list(buf_slots):         # stream ended mid-envelope
+        flush(home)
+    out["dep_batches"] = out["batches_posted"] + out["batches_granted"]
+    out["dep_lines"] = out["lines_posted"] + out["lines_granted"]
+    return out

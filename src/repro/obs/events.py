@@ -43,7 +43,15 @@ Kinds:
   configured serial cost of the same tasks (``sim.sequential_time``).
 * ``dep_msg``        — the sharded dependence manager moved messages over
   one home's MPB channel (``msg`` is ``dep_query``/``dep_grant``/
-  ``release``).
+  ``release``).  One event per *logical* descriptor, independent of how
+  descriptors were packed into envelopes.
+* ``dep_batch``      — one multi-descriptor envelope crossed a home's
+  MPB ring: which manager, the direction (``post`` master->manager,
+  ``grant`` manager->master), how many descriptors it carried and the
+  32-byte MPB lines it occupied.
+* ``pump_idle``      — a dependence pump thread found every inbox it
+  services empty and parked (``dep_pump="threaded"`` only): the first
+  home the thread services and its cumulative idle-wait count.
 * ``manager_admit``  — one per-home manager admitted a footprint slice:
   which manager, the admitted task, how many dependences its grant
   carried, and the channel depth at send time.
@@ -86,6 +94,9 @@ EVENT_FIELDS: dict[str, frozenset] = {
     "tile_cache": frozenset({"worker", "hits", "misses"}),
     "sim_predict": frozenset({"tasks", "predicted_s", "sequential_s"}),
     "dep_msg": frozenset({"manager", "msg", "count"}),
+    "dep_batch": frozenset({"manager", "direction", "descriptors",
+                            "lines"}),
+    "pump_idle": frozenset({"manager", "waits"}),
     "manager_admit": frozenset({"manager", "task", "deps", "depth"}),
     "stats": frozenset({"stats"}),
     "admission_admit": frozenset({"request", "bytes", "in_flight_bytes"}),

@@ -109,12 +109,17 @@ class TrackerBase:
 
     def queue(self, channel: int, delta: int) -> None:
         ch = int(channel)
-        depth = self._depths.get(ch, 0) + int(delta)
-        self._depths[ch] = depth
+        with self._lock:
+            # depth read-modify-write under the same lock _record uses:
+            # emits arrive from the master, host workers, and dependence
+            # pump threads concurrently
+            depth = self._depths.get(ch, 0) + int(delta)
+            self._depths[ch] = depth
         self.emit("queue_depth", channel=ch, depth=depth)
 
     def queue_depths(self) -> dict[int, int]:
-        return dict(self._depths)
+        with self._lock:
+            return dict(self._depths)
 
     def _record(self, ev: Event) -> None:
         raise NotImplementedError

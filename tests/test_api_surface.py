@@ -15,21 +15,21 @@ import pytest
 import repro
 import repro.core
 import repro.serve
-from repro import (AccessMode, DEP_MANAGERS, EXECUTORS, ExecutorKind,
-                   In, InOut, KERNEL_BACKENDS, KernelBackend, Out,
-                   PLACEMENTS, PlacementKind, RuntimeConfig, RuntimeStats,
-                   SCHEDULING_POLICIES, SchedulingPolicy, TaskRuntime,
-                   task, wait_on)
-from repro.core.api import DepManagerKind, _ChoiceEnum
+from repro import (AccessMode, DEP_MANAGERS, DEP_PUMPS, EXECUTORS,
+                   ExecutorKind, In, InOut, KERNEL_BACKENDS, KernelBackend,
+                   Out, PLACEMENTS, PlacementKind, RuntimeConfig,
+                   RuntimeStats, SCHEDULING_POLICIES, SchedulingPolicy,
+                   TaskRuntime, task, wait_on)
+from repro.core.api import DepManagerKind, DepPumpKind, _ChoiceEnum
 from repro.core.blocks import coerce_mode
 
 REPRO_ALL = [
     "TaskRuntime", "task", "wait_on", "current_runtime",
     "BlockArray", "Region", "AccessMode", "In", "Out", "InOut",
     "RuntimeConfig", "RuntimeStats", "STATS_SCHEMA", "TaskFuture",
-    "ExecutorKind", "DepManagerKind", "SchedulingPolicy", "PlacementKind",
-    "KernelBackend", "EXECUTORS", "DEP_MANAGERS", "SCHEDULING_POLICIES",
-    "PLACEMENTS", "KERNEL_BACKENDS",
+    "ExecutorKind", "DepManagerKind", "DepPumpKind", "SchedulingPolicy",
+    "PlacementKind", "KernelBackend", "EXECUTORS", "DEP_MANAGERS",
+    "DEP_PUMPS", "SCHEDULING_POLICIES", "PLACEMENTS", "KERNEL_BACKENDS",
     "Executor",
     "__version__",
 ]
@@ -67,6 +67,7 @@ class TestTypedChoices:
     REGISTRY = {
         "executor": (ExecutorKind, EXECUTORS),
         "dep_manager": (DepManagerKind, DEP_MANAGERS),
+        "dep_pump": (DepPumpKind, DEP_PUMPS),
         "policy": (SchedulingPolicy, SCHEDULING_POLICIES),
         "placement": (PlacementKind, PLACEMENTS),
         "kernel_backend": (KernelBackend, KERNEL_BACKENDS),
@@ -86,10 +87,12 @@ class TestTypedChoices:
         assert set(EXECUTORS) == {"sequential", "host", "staged", "sim",
                                   "sharded"}
         assert set(DEP_MANAGERS) == {"central", "sharded"}
+        assert set(DEP_PUMPS) == {"auto", "sync", "threaded"}
         assert set(KERNEL_BACKENDS) == {"xla", "pallas"}
 
     @pytest.mark.parametrize("enum_cls, values", [
         (ExecutorKind, EXECUTORS), (DepManagerKind, DEP_MANAGERS),
+        (DepPumpKind, DEP_PUMPS),
         (SchedulingPolicy, SCHEDULING_POLICIES),
         (PlacementKind, PLACEMENTS), (KernelBackend, KERNEL_BACKENDS),
     ])
@@ -118,8 +121,8 @@ class TestTypedChoices:
 
     @pytest.mark.parametrize("field, bad", [
         ("executor", "quantum"), ("dep_manager", "none"),
-        ("policy", "lifo"), ("placement", "everywhere"),
-        ("kernel_backend", "cuda"),
+        ("dep_pump", "fibers"), ("policy", "lifo"),
+        ("placement", "everywhere"), ("kernel_backend", "cuda"),
     ])
     def test_invalid_choice_names_the_alternatives(self, field, bad):
         with pytest.raises(ValueError) as e:

@@ -213,15 +213,18 @@ class TestShardedParity:
         mgr = _sharded(ba, 2)
         td = DescriptorPool(capacity=4).acquire(_noop, (Out(ba[0, 0:4]),))
         td.spawn_order = 0
-        # violate the drain-after-pump invariant by hand: a stuffed grant
-        # ring must fail loudly, never drop a dependence set
-        while mgr.grants[0].try_send(DepMessage("dep_grant", 0, td, set())):
+        # violate the drain-before-post invariant by hand: a stuffed grant
+        # ring must fail loudly, never drop a dependence set.  Inject the
+        # query envelope directly — _flush_home would absorb the stuffed
+        # ring first, which is exactly the invariant under test.
+        while mgr.grants[0].try_send(DepMessage("dep_grant", 0, td, [])):
             pass
+        env = DepMessage("dep_batch", 0, None,
+                         [("dep_query", td,
+                           [(False, True, list(ba[0, 0:4].block_ids))])])
+        assert mgr.inbox[0].try_send(env)
         with pytest.raises(RuntimeError, match="overflow"):
-            mgr._post(0, DepMessage("dep_query", 0, td,
-                                    [(False, True,
-                                      list(ba[0, 0:4].block_ids))]))
-            mgr._pump(0)
+            mgr._service(0)
 
 
 # ---------------------------------------------------------------------------
@@ -356,6 +359,189 @@ def test_identical_wave_schedule_on_apps(app, monkeypatch):
 
 
 # ---------------------------------------------------------------------------
+# descriptor-line batching + the concurrent pump (ISSUE 10): wire counts
+# are deterministic functions of the logical stream and the config —
+# identical across pump modes — and the sim-side replay reconciles
+class TestBatchingAndPumps:
+    def _run(self, pump, batch_lines, n=2000, homes=4, **kw):
+        ba = build_array(16, homes, seg=4)
+        mgr = ShardedDependenceManager(n_managers=homes,
+                                       batch_lines=batch_lines, pump=pump,
+                                       pump_threads=2, **kw)
+        mgr.register_array(ba)
+        r = run_stream(n, mgr, ba, window=64)
+        mgr.shutdown()
+        return mgr, r
+
+    def test_batching_packs_envelopes(self):
+        mgr1, _ = self._run("sync", 1)
+        mgr4, _ = self._run("sync", 4)
+        # logical traffic is batching-invariant; wire traffic is not
+        assert mgr4.dep_messages == mgr1.dep_messages
+        assert mgr1.dep_batches == mgr1.dep_messages   # one desc/envelope
+        assert mgr4.dep_batches < mgr4.dep_messages
+        assert mgr4.dep_lines < mgr1.dep_lines
+
+    @pytest.mark.parametrize("batch_lines", [1, 4])
+    def test_wire_counts_pump_invariant(self, batch_lines):
+        sync_mgr, sync_r = self._run("sync", batch_lines)
+        thr_mgr, thr_r = self._run("threaded", batch_lines)
+        assert thr_r["dep_checksum"] == sync_r["dep_checksum"]
+        assert thr_r["deps_found"] == sync_r["deps_found"]
+        assert thr_mgr.dep_messages == sync_mgr.dep_messages
+        assert thr_mgr.dep_batches == sync_mgr.dep_batches
+        assert thr_mgr.dep_lines == sync_mgr.dep_lines
+
+    @pytest.mark.parametrize("pump", ["sync", "threaded"])
+    def test_traffic_reconciles_with_sim(self, pump):
+        from repro.core.sim import predict_dep_traffic
+        mgr, _ = self._run(pump, 4, record_traffic=True)
+        pred = predict_dep_traffic(mgr.traffic_log, 4, mgr.traffic_deps)
+        assert pred["dep_batches"] == mgr.dep_batches
+        assert pred["dep_lines"] == mgr.dep_lines
+
+    @pytest.mark.parametrize("pump", ["sync", "threaded"])
+    def test_tiny_rings_backpressure(self, pump):
+        """channel_slots=2 forces constant ring pressure on every post;
+        the stream must still complete with the same dependence stream
+        and wire counts as the roomy default."""
+        ref_mgr, ref = self._run("sync", 4)
+        mgr, r = self._run(pump, 4, channel_slots=2)
+        assert r["dep_checksum"] == ref["dep_checksum"]
+        assert mgr.dep_messages == ref_mgr.dep_messages
+        assert mgr.dep_batches == ref_mgr.dep_batches
+
+    def test_quiesce_with_admissions_outstanding_raises(self):
+        ba = _grid(2)
+        mgr = _sharded(ba, 2)
+        td = DescriptorPool(capacity=4).acquire(
+            _noop, (Out(ba[0, 0:4]),))
+        td.spawn_order = 0
+        mgr.analyze_begin(td)
+        with pytest.raises(RuntimeError, match="outstanding"):
+            mgr.quiesce()
+        assert len(mgr.admit_finish()) == 1      # drain cleanly
+        mgr.quiesce()                            # now fine
+
+    def test_threaded_pump_wall_accumulates(self):
+        mgr, _ = self._run("threaded", 4)
+        assert mgr.pump_wall_s > 0.0
+        # each stencil task queries one home per footprint row it touches
+        assert sum(mgr.admissions) >= 2000
+
+    def test_split_phase_matches_blocking(self):
+        """analyze() == analyze_begin() + admit_finish() per task: the
+        windowed split-phase admission finds the same dependences."""
+        ba = _grid(4)
+        blocking = _Stream(_sharded(ba, 4))
+        split_mgr = _sharded(ba, 4)
+        pool = DescriptorPool(capacity=256)
+        split_deps = []
+        tds = []
+        for t in range(12):
+            args = (InOut(ba[t % 8, 0:4]), In(ba[(t + 1) % 8, 0:4]))
+            blocking.spawn(f"t{t}", *args)
+            td = pool.acquire(_noop, args)
+            td.spawn_order = t
+            split_mgr.analyze_begin(td)
+            tds.append(td)
+        pairs = split_mgr.admit_finish()
+        assert [td for td, _ in pairs] == tds    # spawn order
+        split_deps = [sorted(d.tid for d in deps) for _, deps in pairs]
+        assert split_deps == [blocking.deps[f"t{t}"] for t in range(12)]
+
+
+class TestPumpRuntimeIntegration:
+    def test_dep_pump_auto_resolves_from_env(self, monkeypatch):
+        monkeypatch.setenv("REPRO_DEPMAN_THREADS", "2")
+        with TaskRuntime(RuntimeConfig(executor="staged",
+                                       dep_manager="sharded")) as rt:
+            assert rt.dep_pump == "threaded"
+        monkeypatch.delenv("REPRO_DEPMAN_THREADS")
+        with TaskRuntime(RuntimeConfig(executor="staged",
+                                       dep_manager="sharded")) as rt:
+            assert rt.dep_pump == "sync"
+
+    def test_stats_carry_wire_counters(self):
+        @task(inout="x")
+        def bump(x):
+            return x + 1.0
+
+        with TaskRuntime(RuntimeConfig(executor="staged",
+                                       dep_manager="sharded",
+                                       dep_pump="threaded",
+                                       dep_batch_lines=4)) as rt:
+            A = rt.zeros((8, 8), (4, 4))
+            for _ in range(4):
+                bump(A[0, 0])
+                bump(A[1, 1])
+            rt.barrier()
+            s = rt.stats()
+        assert s.dep_batches is not None and s.dep_batches > 0
+        assert s.dep_lines is not None and s.dep_lines > 0
+        assert s.dep_batches <= s.dep_messages
+        assert s.pump_wall_s is not None and s.pump_wall_s >= 0.0
+
+    def test_central_stats_leave_wire_fields_none(self):
+        @task(inout="x")
+        def bump(x):
+            return x + 1.0
+
+        with TaskRuntime(RuntimeConfig(executor="staged")) as rt:
+            A = rt.zeros((4, 4), (4, 4))
+            bump(A[0, 0])
+            rt.barrier()
+            s = rt.stats()
+        assert s.dep_batches is None
+        assert s.dep_lines is None
+        assert s.pump_wall_s is None
+
+    def test_dep_batch_events_emitted(self):
+        from repro.obs import InMemoryTracker
+
+        @task(inout="x")
+        def bump(x):
+            return x + 1.0
+
+        trk = InMemoryTracker()
+        with TaskRuntime(RuntimeConfig(executor="staged",
+                                       dep_manager="sharded",
+                                       dep_batch_lines=4,
+                                       tracker=trk)) as rt:
+            A = rt.zeros((8, 8), (4, 4))
+            bump(A[0, 0])
+            bump(A[1, 1])
+            rt.barrier()
+        batches = trk.events_of("dep_batch")
+        assert batches
+        assert {e.data["direction"] for e in batches} == {"post", "grant"}
+        assert all(e.data["lines"] >= 1 for e in batches)
+        assert all(e.data["descriptors"] >= 1 for e in batches)
+
+
+@pytest.mark.parametrize("app", sorted(APPS))
+def test_identical_wave_schedule_across_pumps(app, monkeypatch):
+    """The tentpole determinism pin: the threaded pump schedules the
+    exact same waves as the synchronous one on every paper app."""
+    orig = StagedExecutor._wavefronts
+    schedules = {}
+    for pump in ("sync", "threaded"):
+        log: list = []
+
+        def spy(self, tasks, _log=log):
+            waves = orig(self, tasks)
+            _log.append([tuple(t.tid for t in w) for w in waves])
+            return waves
+
+        monkeypatch.setattr(StagedExecutor, "_wavefronts", spy)
+        run_app(app, "staged", app_kwargs=SIZES[app],
+                dep_manager="sharded", dep_pump=pump, dep_batch_lines=4)
+        schedules[pump] = log
+    assert schedules["sync"] == schedules["threaded"]
+    assert any(schedules["sync"])
+
+
+# ---------------------------------------------------------------------------
 # spawn-throughput benchmark plumbing (the bench artifact entry)
 class TestSpawnThroughputBench:
     def test_run_matrix_checksums_agree(self):
@@ -380,15 +566,20 @@ class TestSpawnThroughputBench:
         gate = importlib.util.module_from_spec(spec)
         spec.loader.exec_module(gate)
 
+        col = {"tasks_per_s": 10.0, "dep_messages": 3.0,
+               "dep_batches": 2.0, "dep_lines": 2.0, "pump_wall_s": 0.1}
         monkeypatch.setattr(
             st, "run_matrix",
             lambda n, homes, grid=64, seg=8, reps=3: {
                 "tasks": n, "grid": grid, "seg": seg,
                 "central": {"tasks": n, "deps_found": 1.0,
                             "blocks_walked": 2.0, "tasks_per_s": 10.0},
-                "sharded": {h: {"tasks_per_s": 10.0, "dep_messages": 3.0}
-                            for h in homes},
+                "sharded": {h: dict(col) for h in homes},
+                "threaded": {h: dict(col) for h in homes},
             })
+        monkeypatch.setattr(
+            st, "reconcile_traffic",
+            lambda **kw: {"reconciled": True, "pumps_agree": True})
         e = st.entry("smoke")
         assert e["id"] == "spawn-throughput-smoke"
         doc = {"schema": gate.SCHEMA, "suite": "smoke",

@@ -72,7 +72,8 @@ class TestEventSchema:
         assert set(EVENT_FIELDS) == {
             "trace_header", "wave_open", "wave_close", "dispatch",
             "kernel_dispatch", "queue_depth", "owner_override",
-            "tile_cache", "sim_predict", "dep_msg", "manager_admit",
+            "tile_cache", "sim_predict", "dep_msg", "dep_batch",
+            "pump_idle", "manager_admit",
             "stats", "admission_admit", "admission_defer",
             "admission_reject", "admission_release",
             "ckpt_save", "ckpt_restore"}
@@ -85,6 +86,9 @@ class TestEventSchema:
         assert EVENT_FIELDS["kernel_dispatch"] == {
             "wave", "executor", "fn", "tasks", "backend", "reason"}
         assert EVENT_FIELDS["dep_msg"] == {"manager", "msg", "count"}
+        assert EVENT_FIELDS["dep_batch"] == {
+            "manager", "direction", "descriptors", "lines"}
+        assert EVENT_FIELDS["pump_idle"] == {"manager", "waits"}
         assert EVENT_FIELDS["manager_admit"] == {
             "manager", "task", "deps", "depth"}
         assert EVENT_FIELDS["wave_close"] == {
